@@ -1,0 +1,63 @@
+"""Paper Table III: end-to-end reconstruction speedup by optimization
+level x precision.
+
+Levels mirror the paper's rows:
+  part      partitioning only: fuse=1 (no slice fusing), direct comm,
+            no overlap (the "Part. Opt." baseline)
+  kernel    + optimized SpMM: fused minibatches (F=4 here)
+  comm      + hierarchical communication + pipeline overlap
+
+CPU wall time; speedups are the derived quantity (the paper reports
+23.19x for Shale with all three levels + mixed precision).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.geometry import XCTGeometry, build_system_matrix
+from repro.core.partition import PartitionConfig, build_plan
+from repro.core.recon import ReconConfig, Reconstructor
+from repro.data.phantom import phantom_slices
+
+from .common import emit, timeit
+
+LEVELS = {
+    "part": dict(fuse=1, comm_mode="direct", overlap=False),
+    "kernel": dict(fuse=4, comm_mode="direct", overlap=False),
+    "comm": dict(fuse=4, comm_mode="hier", overlap=True),
+}
+
+
+def run(n: int = 48, iters: int = 8, quick: bool = False):
+    geo = XCTGeometry(n=n, n_angles=n // 2)
+    a = build_system_matrix(geo)
+    plan = build_plan(
+        geo,
+        PartitionConfig(n_data=1, tile=8, rows_per_block=16,
+                        nnz_per_stage=16),
+        a=a,
+    )
+    x_true = phantom_slices(n, 4)
+    sino = (a @ x_true).astype(np.float32)
+    precisions = ["mixed"] if quick else ["single", "half", "mixed"]
+    base = None
+    for level, kw in LEVELS.items():
+        for prec in precisions:
+            rec = Reconstructor(
+                plan, cfg=ReconConfig(precision=prec, **kw)
+            )
+            fn = rec._get_fn("cg", iters)
+            y = rec.pack_sino(sino)
+            x0 = np.zeros((rec.tomo_pad, 4), np.float32)
+            t = timeit(fn, rec._arrays, y, x0, reps=1 if quick else 3)
+            if base is None:
+                base = t
+            emit(
+                f"recon_speedup/{level}/{prec}",
+                t * 1e6,
+                f"speedup={base/t:.2f}x iters={iters}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Paper Fig. 9: XCT-optimized SpMM speedup + roofline vs fusing factor.
+
+Sweeps the minibatch (slice-fusing) size F across precision policies on a
+real blocked-ELL shard.  CPU wall time measures the *relative* effect of
+fusing (operator elements amortized over F slices -- the paper's register
+reuse); the derived column reports arithmetic intensity and the projected
+TPU-roofline GFLOP/s per chip (min of compute and memory-bound bounds),
+which is the Fig. 9(b) quantity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import XCTGeometry, build_system_matrix
+from repro.core.partition import PartitionConfig, build_plan
+from repro.kernels.ops import apply_operator
+
+from .common import emit, timeit
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False):
+    geo = XCTGeometry(n=n, n_angles=n // 2)
+    a = build_system_matrix(geo)
+    plan = build_plan(
+        geo,
+        PartitionConfig(n_data=1, tile=8, rows_per_block=32,
+                        nnz_per_stage=32),
+        a=a,
+    )
+    op = plan.proj
+    inds = jnp.asarray(op.inds[0])
+    vals = jnp.asarray(op.vals[0])
+    winmap = jnp.asarray(op.winmap[0])
+    _, b, s, r, k = op.inds.shape
+    buf = op.winmap.shape[-1]
+    rng = np.random.default_rng(0)
+    base_t = None
+    policies = (
+        [("single", jnp.float32), ("mixed", jnp.float16)]
+        if quick
+        else [
+            ("double", jnp.float32),  # f64 n/a on TPU; f32 stands in
+            ("single", jnp.float32),
+            ("half", jnp.float16),
+            ("mixed", jnp.float16),
+        ]
+    )
+    for prec, sdt in policies:
+        cdt = jnp.float16 if prec == "half" else jnp.float32
+        for f in fusings:
+            x = jnp.asarray(
+                rng.normal(size=(op.cols_per_dev, f)).astype(np.float32)
+            )
+            fn = jax.jit(
+                lambda xx, i=inds, v=vals, w=winmap, sd=sdt, cd=cdt:
+                apply_operator(i, v, w, xx, storage_dtype=sd,
+                               compute_dtype=cd)
+            )
+            t = timeit(fn, x, reps=3 if not quick else 1)
+            slots = float(b * s * r * k)
+            flops = 2.0 * slots * f
+            if base_t is None:
+                base_t = t / flops  # seconds per flop at F=1 baseline
+            sb = jnp.dtype(sdt).itemsize
+            bytes_moved = slots * (2 + sb) + b * s * buf * (
+                4 + sb * f * 2
+            ) + b * r * f * 8
+            ai = flops / bytes_moved
+            tpu_gflops = min(PEAK, ai * HBM) / 1e9
+            emit(
+                f"spmm_fusing/{prec}/F={f}",
+                t * 1e6,
+                # throughput speedup per unit work (paper Fig. 9a metric)
+                f"speedup={base_t/(t/flops):.2f}x ai={ai:.2f}flop/B "
+                f"roofline={tpu_gflops:.0f}GF/s",
+            )
+
+
+if __name__ == "__main__":
+    run()

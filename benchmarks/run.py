@@ -1,0 +1,58 @@
+"""Benchmark aggregator: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  spmm_fusing     Fig. 9  (a) speedup vs fusing factor, (b) roofline
+  recon_speedup   Table III  optimization level x precision
+  comm_volumes    Table IV + Fig. 11  per-hierarchy-level volumes
+  scaling_*       Fig. 12  strong / weak scaling
+  convergence     Fig. 13  residual vs precision (f64 via subprocess)
+
+``--quick`` shrinks problem sizes (used by CI).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma list: spmm,recon,comms,scaling,convergence",
+    )
+    args = ap.parse_args(argv)
+
+    from . import (
+        bench_comms, bench_convergence, bench_recon, bench_scaling,
+        bench_spmm,
+    )
+
+    benches = {
+        "spmm": bench_spmm.run,
+        "recon": bench_recon.run,
+        "comms": bench_comms.run,
+        "scaling": bench_scaling.run,
+        "convergence": bench_convergence.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        try:
+            fn(quick=args.quick)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: reconstruct a phantom in ~30 lines with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.geometry import XCTGeometry, build_system_matrix
+from repro.core.partition import PartitionConfig, build_plan
+from repro.core.recon import ReconConfig, Reconstructor
+from repro.data.phantom import phantom_slices, simulate_measurements
+
+
+def main():
+    # 1. scan geometry (one slice; all slices share the system matrix)
+    geo = XCTGeometry(n=48, n_angles=72)
+    a = build_system_matrix(geo)
+
+    # 2. partition plan: 1 device here; same code scales to a pod
+    plan = build_plan(geo, PartitionConfig(n_data=1))
+
+    # 3. simulate a measurement of an 8-slice phantom
+    x_true = phantom_slices(geo.n, 8)
+    sino = simulate_measurements(a, x_true, noise=0.01)
+
+    # 4. reconstruct with the paper's mixed-precision + hierarchical comm
+    rec = Reconstructor(
+        plan,
+        cfg=ReconConfig(precision="mixed", comm_mode="hier", fuse=4),
+    )
+    x, residuals = rec.reconstruct(sino, iters=24)
+
+    rel = np.linalg.norm(x - x_true, axis=0) / np.linalg.norm(
+        x_true, axis=0
+    )
+    print(f"relative error per slice: {np.round(rel, 3)}")
+    print(f"residual: {residuals[0, 0]:.3e} -> {residuals[-1, 0]:.3e}")
+    assert rel.mean() < 0.25
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

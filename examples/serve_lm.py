@@ -1,0 +1,27 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-4b --batch 4
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args(argv)
+
+    gen = serve_main([
+        "--arch", args.arch, "--smoke",
+        "--batch", str(args.batch),
+        "--prompt-len", "24", "--gen", str(args.gen),
+    ])
+    assert gen.shape == (args.batch, args.gen)
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

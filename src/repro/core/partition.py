@@ -1,0 +1,383 @@
+"""3D partitioning: batch parallelism x Hilbert-ordered data parallelism.
+
+Implements the paper's Sec. III-A for TPU meshes:
+
+  * slices along the rotation axis are *batch*-parallel (no communication;
+    they share the system matrix ``A``) -> mapped to the slow mesh axes;
+  * each slice is *data*-parallel: tomogram voxels and sinogram rays are
+    Hilbert-ordered (``core.hilbert``) and cut into ``P_d`` equal contiguous
+    chunks -> mapped to the fast mesh axes;
+  * each device's sparse shard is compiled into a static **blocked-ELL**
+    layout consumed by the Pallas SpMM kernel: rows are grouped into
+    row-blocks of ``R`` rows; every row-block is processed in ``S`` stages;
+    a stage consumes ``K`` nnz slots per row and stages a *window* of at
+    most ``BUF`` unique input columns into VMEM (the paper's multi-stage
+    3D input buffering, Sec. III-B4, with the window playing the role of
+    the 96 KB shared-memory buffer).
+
+Per-nnz storage is 4 bytes -- int16 window index + fp16 length -- matching
+the paper's ``{unsigned short ind; half len;}`` packing (Sec. III-C2).
+
+The partial outputs of a device cover only a contiguous *band* of the
+(Hilbert-ordered) output rows; band metadata drives the sparse-aware
+banded exchange in ``dist.collectives`` (paper Fig. 6-7: the overlap of
+partial-data footprints is what hierarchical communication exploits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import scipy.sparse as sp
+
+from .geometry import XCTGeometry, build_system_matrix
+from .hilbert import tile_hilbert_order
+
+__all__ = ["PartitionConfig", "OperatorShards", "Plan", "build_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """Static knobs of the decomposition + kernel layout."""
+
+    n_data: int = 1  # P_d: in-slice data-parallel devices
+    tile: int = 8  # Hilbert patch side (cells)
+    rows_per_block: int = 32  # R: kernel row-block height
+    nnz_per_stage: int = 32  # K: nnz slots per row per stage
+    index_dtype: type = np.int16  # window index (2 bytes, paper packing)
+    value_dtype: type = np.float16  # stored lengths (2 bytes, paper packing)
+
+
+@dataclasses.dataclass
+class OperatorShards:
+    """Blocked-ELL shards for one operator (A or A^T), stacked over devices.
+
+    Rows are packed as *virtual rows*: a matrix row with more nnz than
+    ``S * K`` slots is split across several virtual rows (its partials are
+    summed by the output scatter-add), and virtual rows are packed densely
+    into blocks of ``R``.  This keeps ELL padding at the ceil-rounding
+    level (~1.2x nnz) instead of max-row-driven (measured 5-7x), and
+    avoids empty rows entirely even though the footprint of a subdomain is
+    a scattered O(1/sqrt(P_d)) subset of the (Hilbert-ordered) output rows
+    (EXPERIMENTS.md §Perf XCT iteration: "row splitting").
+
+    Shapes (P = n_data, B = virtual-row blocks, S = stages, R = rows/block,
+    K = nnz slots/row/stage, BUF = window entries/stage):
+
+      inds       [P, B, S, R, K]  window-local column index (int16)
+      vals       [P, B, S, R, K]  intersection lengths (float32 master copy;
+                                  cast to the precision policy's storage
+                                  dtype at apply time)
+      winmap     [P, B, S, BUF]   device-local input column ids to stage
+      row_map    [P, B, R]        global (padded) output row of each
+                                  virtual row; padding points at
+                                  ``n_rows_pad`` (dropped by the scatter);
+                                  duplicates (split rows) are summed
+      foot_rows  list[P] of int64 arrays -- global rows with nnz per device
+                                  (host-side only; drives exchange tables
+                                  and the Table-IV volume accounting)
+    """
+
+    inds: np.ndarray
+    vals: np.ndarray
+    winmap: np.ndarray
+    row_map: np.ndarray
+    foot_rows: list
+    n_rows_pad: int  # padded global output rows (multiple of P * chunk)
+    n_cols_pad: int  # padded global input cols (multiple of P * chunk)
+    rows_per_dev: int  # output ownership chunk
+    cols_per_dev: int  # input ownership chunk
+    nnz: int  # true nnz across devices (before padding)
+
+    @property
+    def flat_rows(self) -> int:
+        """Rows in the concatenated occupied-block space (B * R)."""
+        return self.inds.shape[1] * self.inds.shape[3]
+
+    @property
+    def padded_nnz(self) -> int:
+        return int(np.prod(self.inds.shape))
+
+    def hbm_bytes(self, value_bytes: int = 2, index_bytes: int = 2) -> int:
+        """HBM footprint of the operator in the paper's packed layout."""
+        return self.padded_nnz * (value_bytes + index_bytes) + (
+            self.winmap.size * 4 + self.block_rows.size * 4
+        )
+
+
+@dataclasses.dataclass
+class Plan:
+    """Full per-volume partition plan (both operators + orderings)."""
+
+    geo: XCTGeometry
+    cfg: PartitionConfig
+    row_perm: np.ndarray  # curve position -> flat sinogram cell
+    col_perm: np.ndarray  # curve position -> flat voxel
+    proj: OperatorShards  # rows = sinogram, cols = tomogram
+    back: OperatorShards  # rows = tomogram, cols = sinogram
+
+    @property
+    def n_data(self) -> int:
+        return self.cfg.n_data
+
+
+def _pad_to(x: int, m: int) -> int:
+    return m * int(math.ceil(x / m))
+
+
+def _build_operator(
+    a_perm: sp.csr_matrix,
+    cfg: PartitionConfig,
+    rows_per_dev: int,
+    cols_per_dev: int,
+) -> OperatorShards:
+    """Compile a (row+col Hilbert-permuted) sparse matrix into blocked-ELL.
+
+    Fully vectorized: per device, every nnz entry is assigned a destination
+    (block, stage, row-in-block, slot) and a window-local column index in
+    O(nnz log nnz) NumPy, no per-row Python loops.
+
+    ``rows_per_dev`` / ``cols_per_dev`` are dictated by the plan so that the
+    tomogram (x) and sinogram (y) vector spaces are *shared* between A and
+    A^T -- CG hands one operator's output chunk straight to the other.
+    """
+    P = cfg.n_data
+    R, K = cfg.rows_per_block, cfg.nnz_per_stage
+    n_rows, n_cols = a_perm.shape
+    n_cols_pad = cols_per_dev * P
+    n_rows_pad = rows_per_dev * P
+    assert n_cols_pad >= n_cols and n_rows_pad >= n_rows
+
+    a_csc = a_perm.tocsc()
+
+    # --- pass 1: per-device virtual-row assignment; global B and S --------
+    # S covers the mean row load (x1.35 headroom); rows needing more than
+    # S*K slots are split into several virtual rows (partials summed by
+    # the output scatter-add); virtual rows pack densely into R-blocks.
+    per_dev: list[sp.csr_matrix] = []
+    foot_rows: list[np.ndarray] = []  # per device: rows with nnz
+    max_blocks = 1
+    s_global = 1
+    for p in range(P):
+        c0, c1 = p * cols_per_dev, min((p + 1) * cols_per_dev, n_cols)
+        sub = a_csc[:, c0:c1].tocsr()
+        sub.sort_indices()
+        per_dev.append(sub)
+        nz_rows = np.flatnonzero(np.diff(sub.indptr))
+        foot_rows.append(nz_rows.astype(np.int64))
+        if nz_rows.size == 0:
+            continue
+        row_nnz = np.diff(sub.indptr)
+        mean_nnz = row_nnz[nz_rows].mean()
+        s_global = max(
+            s_global, int(math.ceil(1.35 * mean_nnz / K))
+        )
+    S = s_global
+    cap = S * K  # slots per virtual row
+
+    staged = []
+    for p in range(P):
+        sub = per_dev[p]
+        row_nnz = np.diff(sub.indptr)
+        n_virt = int(np.ceil(row_nnz / cap).sum())
+        max_blocks = max(max_blocks, int(math.ceil(n_virt / R)))
+        staged.append(None)
+    B = _pad_to(max(1, max_blocks), 8)
+
+    # --- pass 2: per-device entry destinations + window construction ------
+    # For each nnz: (block, stage, virtual-row-in-block, slot) destination,
+    # plus the window-local column index obtained by grouping (block,
+    # stage) and deduplicating columns inside each group.
+    buf = 8
+    nnz = 0
+    for p in range(P):
+        sub = per_dev[p]
+        indptr, cols, data = sub.indptr, sub.indices, sub.data
+        m = data.size
+        nnz += int(m)
+        if m == 0:
+            continue
+        row_of = np.repeat(
+            np.arange(n_rows, dtype=np.int64), np.diff(indptr)
+        )
+        pos = np.arange(m, dtype=np.int64) - indptr[row_of]
+        virt = pos // cap  # split index within the row
+        stage = (pos % cap) // K
+        slot = pos % K
+        # dense virtual-row ids: rank of (row, virt) among unique pairs
+        vkey = row_of * np.int64(n_rows + 1) + virt
+        uv, vrow = np.unique(vkey, return_inverse=True)
+        blk = vrow // R
+        ri = vrow % R
+        group = blk * S + stage  # [0, B*S)
+        key = group * np.int64(n_cols_pad) + cols
+        uk, inv = np.unique(key, return_inverse=True)
+        ug = uk // n_cols_pad
+        uc = uk % n_cols_pad
+        gstart = np.searchsorted(ug, np.arange(B * S, dtype=np.int64))
+        local = np.arange(uk.size, dtype=np.int64) - gstart[ug]
+        buf = max(buf, int((local + 1).max()))
+        staged[p] = (group, ri, slot, data, inv, ug, uc, local, uv)
+    buf = _pad_to(buf, 8)
+    assert buf < 32768, f"window {buf} overflows int16 index"
+
+    # --- pass 3: materialize ---------------------------------------------
+    inds = np.zeros((P, B, S, R, K), dtype=cfg.index_dtype)
+    vals = np.zeros((P, B, S, R, K), dtype=np.float32)
+    winmap = np.zeros((P, B, S, buf), dtype=np.int32)
+    row_map = np.full((P, B, R), n_rows_pad, dtype=np.int32)
+    for p in range(P):
+        if staged[p] is None:
+            continue
+        group, ri, slot, data, inv, ug, uc, local, uv = staged[p]
+        flat_iv = inds[p].reshape(B * S, R, K)
+        flat_vv = vals[p].reshape(B * S, R, K)
+        flat_iv[group, ri, slot] = local[inv].astype(cfg.index_dtype)
+        flat_vv[group, ri, slot] = data
+        winmap[p].reshape(B * S, buf)[ug, local] = uc
+        vrows = (uv // np.int64(n_rows + 1)).astype(np.int32)
+        row_map[p].reshape(-1)[: vrows.size] = vrows
+
+    return OperatorShards(
+        inds=inds,
+        vals=vals,
+        winmap=winmap,
+        row_map=row_map,
+        foot_rows=foot_rows,
+        n_rows_pad=n_rows_pad,
+        n_cols_pad=n_cols_pad,
+        rows_per_dev=rows_per_dev,
+        cols_per_dev=cols_per_dev,
+        nnz=nnz,
+    )
+
+
+def build_plan(
+    geo: XCTGeometry,
+    cfg: PartitionConfig,
+    a: sp.csr_matrix | None = None,
+) -> Plan:
+    """Build the full partition plan for one scan geometry.
+
+    ``a`` may be passed in to reuse a prebuilt system matrix (memoization
+    across precision policies in benchmarks).
+    """
+    if a is None:
+        a = build_system_matrix(geo)
+    # Hilbert orderings for both domains (paper Fig. 4a: square patches).
+    col_perm, _ = tile_hilbert_order(geo.n, geo.n, cfg.tile)
+    row_perm, _ = tile_hilbert_order(geo.n_angles, geo.num_det, cfg.tile)
+    a_perm = a[row_perm][:, col_perm].tocsr()
+    # Shared vector-space chunking: tomogram chunk serves as proj input and
+    # back output; sinogram chunk as proj output and back input.
+    P, R = cfg.n_data, cfg.rows_per_block
+    align = max(8, R)
+    tomo_chunk = _pad_to(int(math.ceil(geo.n_vox / P)), align)
+    sino_chunk = _pad_to(int(math.ceil(geo.n_rays / P)), align)
+    proj = _build_operator(a_perm, cfg, sino_chunk, tomo_chunk)
+    back = _build_operator(a_perm.T.tocsr(), cfg, tomo_chunk, sino_chunk)
+    return Plan(
+        geo=geo, cfg=cfg, row_perm=row_perm, col_perm=col_perm,
+        proj=proj, back=back,
+    )
+
+
+def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
+    """Analytic shard-shape estimation for dry-run lowering at full scale.
+
+    Returns a Plan whose OperatorShards carry ``jax.ShapeDtypeStruct``
+    leaves (no allocation, no system-matrix build -- Brain-scale nnz is
+    ~7e11).  Geometry model (constants calibrated against real plans at
+    n in [64, 256], see tests/test_partition.py::test_estimate_matches):
+
+      * footprint rows/device ~ 1.8 * n_rows / sqrt(P)   (sqrt2 shadow x
+        ~1.27 Hilbert-scatter/imbalance margin)
+      * max per-device row nnz ~ min(1.45 n, 2.4 n / sqrt(P))  (proj);
+        for A^T rows are voxels: ~ min(1.3 K, 2.4 * 1.3 K / sqrt(P))
+      * window BUF ~ 6 (R + K), pair volume V ~ 2.5 * foot / P
+    """
+    import jax as _jax
+
+    P, R, K = cfg.n_data, cfg.rows_per_block, cfg.nnz_per_stage
+    align = max(8, R)
+    tomo_chunk = _pad_to(int(math.ceil(geo.n_vox / P)), align)
+    sino_chunk = _pad_to(int(math.ceil(geo.n_rays / P)), align)
+    nnz_total = geo.n_rays * 1.195 * geo.n
+    sqrt_p = math.sqrt(P)
+
+    def one(n_rows, n_cols, rows_per_dev, cols_per_dev):
+        foot = min(n_rows, int(1.8 * n_rows / sqrt_p) + R)
+        mean_nnz = nnz_total / P / max(foot, 1)
+        s = max(1, int(math.ceil(1.35 * mean_nnz / K)))
+        # virtual rows: one per footprint row plus splits for fat rows,
+        # ~1.2x slot utilization headroom
+        vrows = int(1.2 * max(foot, nnz_total / P / (s * K)))
+        b = _pad_to(max(1, int(math.ceil(vrows / R))), 8)
+        buf = _pad_to(min(6 * (R + K), R * K), 8)
+        v = _pad_to(max(8, int(2.5 * vrows / P)), 8)
+        sds = _jax.ShapeDtypeStruct
+        op = OperatorShards(
+            inds=sds((P, b, s, R, K), np.int16),
+            vals=sds((P, b, s, R, K), np.float32),
+            winmap=sds((P, b, s, buf), np.int32),
+            row_map=sds((P, b, R), np.int32),
+            foot_rows=None,
+            n_rows_pad=rows_per_dev * P,
+            n_cols_pad=cols_per_dev * P,
+            rows_per_dev=rows_per_dev,
+            cols_per_dev=cols_per_dev,
+            nnz=int(nnz_total),
+        )
+        op.est_v = v  # type: ignore[attr-defined]
+        return op
+
+    proj = one(geo.n_rays, geo.n_vox, sino_chunk, tomo_chunk)
+    back = one(geo.n_vox, geo.n_rays, tomo_chunk, sino_chunk)
+    return Plan(
+        geo=geo, cfg=cfg, row_perm=None, col_perm=None,
+        proj=proj, back=back,
+    )
+
+
+def build_sparse_exchange(
+    op: OperatorShards,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Static index tables for the footprint-compressed exchange.
+
+    For every (sender p, receiver q) pair, the virtual-row slots of p
+    whose global row lands in q's owned chunk (split rows contribute one
+    entry per virtual row; the receiver scatter-add sums them).  Padding:
+    send indices point at the appended zero row (``flat_rows``), receive
+    indices at the trash row (``rows_per_dev``) -- see
+    ``dist.collectives.sparse_exchange``.
+
+    Returns ``(send_idx [P,P,V], recv_idx [P,P,V], V)``.
+    """
+    P = op.inds.shape[0]
+    rpd = op.rows_per_dev
+    counts = np.zeros((P, P), dtype=np.int64)
+    pair_rows: dict[tuple[int, int], tuple] = {}
+    for p in range(P):
+        rm = op.row_map[p].reshape(-1)  # [B*R] global row per vrow slot
+        flat = np.flatnonzero(rm < op.n_rows_pad)
+        if flat.size == 0:
+            continue
+        rows = rm[flat].astype(np.int64)
+        owner = rows // rpd
+        order = np.argsort(owner, kind="stable")
+        rows_s, flat_s, owner_s = rows[order], flat[order], owner[order]
+        uq, start = np.unique(owner_s, return_index=True)
+        bounds = np.append(start, owner_s.size)
+        for i, q in enumerate(uq):
+            sel = slice(bounds[i], bounds[i + 1])
+            pair_rows[(p, int(q))] = (rows_s[sel], flat_s[sel])
+            counts[p, q] = bounds[i + 1] - bounds[i]
+    v = _pad_to(max(1, int(counts.max())), 8)
+    flat_rows = op.flat_rows
+    send = np.full((P, P, v), flat_rows, dtype=np.int32)
+    recv = np.full((P, P, v), rpd, dtype=np.int32)
+    for (p, q), (rows, flat) in pair_rows.items():
+        send[p, q, : rows.size] = flat
+        recv[q, p, : rows.size] = rows - q * rpd
+    return send, recv, v

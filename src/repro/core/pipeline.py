@@ -1,0 +1,73 @@
+"""Batch processing pipeline: minibatch comm/compute overlap (Sec. III-E).
+
+One (back)projection over an I/O batch of ``Y`` slices is processed as
+``Y / F`` minibatches of ``F`` fused slices.  The paper overlaps the global
+(MPI) reduction of minibatch ``i`` with the local work of minibatch ``i+1``
+(Fig. 8).  We express the same schedule as a software-pipelined
+``lax.scan``: each step issues the kernel for chunk ``i`` *and* the
+reduction for the carried chunk ``i-1``; the two have no data dependency
+inside the step, so XLA's async collectives / latency-hiding scheduler can
+run them concurrently on TPU.
+
+``overlap=False`` serializes the two phases per step (the paper's
+measurement mode, Fig. 10-11, where communications are synchronized to be
+timed).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pipelined_apply"]
+
+
+def pipelined_apply(
+    kernel_fn: Callable,
+    reduce_fn: Callable,
+    x_all,
+    fuse: int,
+    *,
+    overlap: bool = True,
+):
+    """Apply ``reduce_fn(kernel_fn(chunk))`` over slice-minibatches.
+
+    Args:
+      kernel_fn: [C, F] slab -> [band_rows, F] partial (local SpMM).
+      reduce_fn: [band_rows, F] partial -> [rows_out, F] owned chunk
+        (the communication phase).
+      x_all: [C, Y] input slab, ``Y = n_mini * fuse``.
+      fuse: minibatch size F (the paper's FFACTOR; 16 in their runs).
+      overlap: software-pipeline the two phases (Fig. 8) or serialize.
+
+    Returns:
+      [rows_out, Y] reduced output for the whole I/O batch.
+    """
+    c, y = x_all.shape
+    assert y % fuse == 0, (y, fuse)
+    n_mini = y // fuse
+    chunks = x_all.reshape(c, n_mini, fuse).transpose(1, 0, 2)  # [n,C,F]
+
+    if not overlap or n_mini == 1:
+        def step(_, xc):
+            return None, reduce_fn(kernel_fn(xc))
+        _, outs = jax.lax.scan(step, None, chunks)
+    else:
+        first_band = kernel_fn(chunks[0])
+
+        def step(pending, xc):
+            # kernel(i) and reduce(i-1) are independent -> overlappable.
+            band = kernel_fn(xc)
+            out_prev = reduce_fn(pending)
+            return band, out_prev
+
+        last_band, outs_head = jax.lax.scan(step, first_band, chunks[1:])
+        outs_tail = reduce_fn(last_band)[None]
+        outs = (
+            jnp.concatenate([outs_head, outs_tail], axis=0)
+            if n_mini > 1
+            else outs_tail
+        )
+    # [n, rows_out, F] -> [rows_out, Y]
+    return outs.transpose(1, 0, 2).reshape(outs.shape[1], y)

@@ -1,0 +1,121 @@
+"""Mixed-precision policies + adaptive normalization (paper Sec. III-C).
+
+The paper stores and communicates in half precision and computes in single
+precision, guarding fp16's narrow range with *adaptive normalization*: the
+(de)normalization factor follows the max-norm of the evolving iterate so
+casts neither overflow nor underflow.
+
+On TPU the natural half type is bf16 (wide exponent -> normalization rarely
+binds) but fp16 is retained both for paper fidelity and because it is the
+denser VREG type on some targets.  The four policies mirror the paper's
+double / single / half / mixed ladder; ``double`` uses f64 (available on the
+CPU validation platform; on TPU deployments it maps to f32 -- documented in
+DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Precision", "POLICIES", "get_policy", "adaptive_scale", "qcast"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """A storage/compute/communication dtype triple.
+
+    Attributes:
+      storage: dtype of resident vectors and of the sparse-matrix values
+        (the paper's 2-byte ``len`` when half/mixed).
+      compute: FMA/accumulation dtype inside kernels.
+      comm: wire dtype for partial-data reductions.
+      adaptive: apply max-norm power-of-two rescaling around narrow casts.
+    """
+
+    name: str
+    storage: jnp.dtype
+    compute: jnp.dtype
+    comm: jnp.dtype
+    adaptive: bool = False
+
+    @property
+    def storage_bytes(self) -> int:
+        return jnp.dtype(self.storage).itemsize
+
+    @property
+    def comm_bytes(self) -> int:
+        return jnp.dtype(self.comm).itemsize
+
+
+POLICIES = {
+    "double": Precision("double", jnp.float64, jnp.float64, jnp.float64),
+    "single": Precision("single", jnp.float32, jnp.float32, jnp.float32),
+    "half": Precision("half", jnp.float16, jnp.float16, jnp.float16),
+    "mixed": Precision(
+        "mixed", jnp.float16, jnp.float32, jnp.float16, adaptive=True
+    ),
+    # TPU-native variants (beyond-paper; bf16 wire format).
+    "bf16": Precision("bf16", jnp.bfloat16, jnp.bfloat16, jnp.bfloat16),
+    "mixed_bf16": Precision(
+        "mixed_bf16", jnp.bfloat16, jnp.float32, jnp.bfloat16, adaptive=True
+    ),
+}
+
+
+def get_policy(name: str) -> Precision:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown precision {name!r}; one of {sorted(POLICIES)}"
+        ) from None
+
+
+def adaptive_scale(x, target: float = 256.0, axis_name=None):
+    """Power-of-two factor steering ``max|x|`` to ``target`` (Sec. III-C1).
+
+    Power-of-two so the scaling itself is lossless in any binary float
+    format.  When ``axis_name`` is given (inside shard_map) the max-norm is
+    taken over the named axes so every shard applies the *same* factor.
+    Returns the scale ``s`` such that ``x * s`` is cast-safe; apply ``1/s``
+    after the round trip.
+    """
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    if axis_name is not None:
+        m = jax.lax.pmax(m, axis_name)
+    m = jnp.maximum(m, jnp.finfo(jnp.float32).tiny)
+    exp = jnp.round(jnp.log2(target / m))
+    # Clamp so the factor itself stays representable far from inf/0;
+    # ldexp(1, e) = 2^e bit-exactly (exp2 would round in f32).
+    exp = jnp.clip(exp, -100.0, 100.0).astype(jnp.int32)
+    return jnp.ldexp(jnp.float32(1.0), exp)
+
+
+def adaptive_scale_cols(x, target: float = 1.0, axis_name=None):
+    """Per-column (per-slice) power-of-two normalization factors.
+
+    The paper's III-C1 applied to the evolving CG vectors: each fused
+    slice gets its own factor (slices are independent problems with
+    independent dynamic ranges).  Returns ``s`` with shape ``[F]``.
+    """
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0)
+    if axis_name is not None:
+        m = jax.lax.pmax(m, axis_name)
+    m = jnp.maximum(m, jnp.finfo(jnp.float32).tiny)
+    exp = jnp.clip(jnp.round(jnp.log2(target / m)), -100, 100)
+    return jnp.ldexp(jnp.ones_like(m), exp.astype(jnp.int32))
+
+
+def qcast(x, dtype, *, adaptive: bool = False, target: float = 256.0,
+          axis_name=None):
+    """Cast with optional adaptive normalization.
+
+    Returns ``(x_cast, inv_scale)``; multiply by ``inv_scale`` after the
+    matching upcast.  For wide targets (f32/f64) this is a plain cast.
+    """
+    if jnp.dtype(dtype).itemsize >= 4 or not adaptive:
+        return x.astype(dtype), jnp.float32(1.0)
+    s = adaptive_scale(x, target=target, axis_name=axis_name)
+    return (x.astype(jnp.float32) * s).astype(dtype), 1.0 / s

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing never touches jax
+device state.  Mesh axes (fast -> slow physical links):
+
+  "model" -- minor ICI axis: tensor/expert parallelism (XCT: in-slice data
+             parallelism's fastest reduction level, the paper's "socket")
+  "data"  -- major ICI axis: data parallelism (XCT: "node" level)
+  "pod"   -- inter-pod DCI: outermost data parallelism (XCT: "global")
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axis_classes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_axis_classes(multi_pod: bool = False) -> dict:
+    """Link-speed class per axis (used by the roofline collective model)."""
+    base = {"data": "ici", "model": "ici"}
+    if multi_pod:
+        base["pod"] = "dci"
+    return base

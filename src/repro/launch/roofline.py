@@ -1,0 +1,55 @@
+"""Roofline table generator: dry-run JSON artifacts -> markdown tables.
+
+  PYTHONPATH=src python -m repro.launch.roofline \
+      results/dryrun_single_pod.json [results/dryrun_single_pod_hints.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_row(r):
+    if r["status"] != "ok":
+        return (
+            f"| {r.get('arch','?'):22s} | {r.get('shape','?'):12s} | "
+            f"{r['status']} ||||||||"
+        )
+    rf = r["roofline"]
+    return (
+        f"| {r['arch']:22s} | {r['shape']:12s} "
+        f"| {rf['compute']:9.3f} | {rf['memory']:9.2f} "
+        f"| {rf.get('memory_analytic', 0):9.4f} "
+        f"| {rf['collective']:9.3f} | {rf.get('dominant_adj', '?'):10s} "
+        f"| {rf.get('t_step_adj', 0):8.3f} "
+        f"| {rf['model_flops_ratio']:5.2f} "
+        f"| {rf.get('roofline_fraction_adj', 0):6.3f} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | compute s | mem(HLO) s | mem(analytic) s | "
+    "collective s | dominant | t_step s | MF ratio | roofline frac |\n"
+    "|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def emit(path):
+    rows = json.load(open(path))
+    print(f"\n### {path}\n")
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        fr = [r["roofline"].get("roofline_fraction_adj", 0) for r in ok]
+        print(
+            f"\n{len(ok)} ok / {len(rows)} cells; "
+            f"roofline fraction: min {min(fr):.3f} "
+            f"median {sorted(fr)[len(fr)//2]:.3f} max {max(fr):.3f}"
+        )
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        emit(p)

@@ -1,0 +1,110 @@
+"""XCT §Perf sweep: comm ladder x fusing factor at Brain/Charcoal scale.
+
+Iterates the paper's own levers on the paper's own workload using the
+slot-exact cost model (launch/dryrun.xct_analytic) -- no compile needed,
+so the full design space is swept: communication mode
+(direct / rs / hier / sparse) x fusing factor F x precision.
+
+  PYTHONPATH=src python -m repro.launch.xct_perf
+"""
+from __future__ import annotations
+
+import json
+
+from ..configs.xct_datasets import DATASETS
+from ..core.geometry import XCTGeometry
+from ..core.partition import PartitionConfig, estimate_plan
+from ..core.recon import ReconConfig
+from .hlo_analysis import HW
+
+
+def comm_volume(plan, mode: str, fuse: int, comm_bytes: int, p_data: int,
+                fast: int = 16):
+    """Per-device wire bytes per reduction, by mode and link class."""
+    out = {"ici": 0.0, "dci": 0.0}
+    for op in (plan.proj, plan.back):
+        dense = float(op.n_rows_pad) * fuse * comm_bytes
+        if mode == "direct":
+            # all-reduce semantics: full dense partial, all links carry it
+            out["ici"] += 2 * dense
+            out["dci"] += 2 * dense / 256.0
+        elif mode == "rs":
+            out["ici"] += dense
+            out["dci"] += dense / 256.0
+        elif mode == "hier":
+            out["ici"] += dense
+            out["dci"] += dense / 256.0 / fast  # local reduction first
+        elif mode == "sparse":
+            v = getattr(op, "est_v", 8)
+            wire = float(p_data) * v * fuse * comm_bytes
+            out["ici"] += wire
+            out["dci"] += wire / 256.0 / fast
+    return out
+
+
+def sweep(dataset="xct-brain", p_data=512, iters=30):
+    ds = DATASETS[dataset]
+    geo = XCTGeometry(n=ds.n, n_angles=ds.k)
+    pcfg = PartitionConfig(
+        n_data=p_data, tile=32, rows_per_block=64, nnz_per_stage=64
+    )
+    plan = estimate_plan(geo, pcfg)
+    rows = []
+    nnz_total = geo.n_rays * 1.195 * ds.n
+    for mode in ("direct", "rs", "hier", "sparse"):
+        for fuse in (1, 4, 16, 64):
+            sb = 2  # mixed: f16/bf16 storage + wire
+            flops = 0.0
+            hbm = 0.0
+            for op in (plan.proj, plan.back):
+                _, b, s, r, k = op.inds.shape
+                buf = op.winmap.shape[-1]
+                slots = float(b) * s * r * k
+                flops += iters * 2.0 * slots * fuse
+                hbm += iters * (
+                    slots * (2 + sb)
+                    + float(b) * s * buf * (4 + 2 * sb * fuse)
+                    + float(b) * r * fuse * 4 * 2
+                )
+            cv = comm_volume(plan, mode, fuse, sb, p_data)
+            t_comp = flops / HW.peak_flops
+            t_mem = hbm / HW.hbm_bw
+            t_coll = iters * (
+                cv["ici"] / HW.ici_bw + cv["dci"] / HW.dci_bw
+            )
+            useful = 4.0 * nnz_total * fuse * iters / p_data
+            t_step = max(t_comp, t_mem, t_coll)
+            rows.append({
+                "dataset": dataset, "mode": mode, "fuse": fuse,
+                "t_compute": t_comp, "t_memory": t_mem,
+                "t_collective": t_coll,
+                "dominant": max(
+                    (("compute", t_comp), ("memory", t_mem),
+                     ("collective", t_coll)), key=lambda kv: kv[1],
+                )[0],
+                "t_per_slice_ms": 1e3 * t_step / fuse,
+                "roofline_fraction": (
+                    useful / HW.peak_flops
+                ) / t_step,
+            })
+    return rows
+
+
+def main():
+    rows = sweep()
+    with open("results/xct_perf_sweep.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    hdr = (f"{'mode':8s} {'F':>3s} {'comp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'dom':>10s} {'ms/slice':>9s} {'frac':>6s}")
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['mode']:8s} {r['fuse']:3d} {r['t_compute']:8.3f} "
+            f"{r['t_memory']:8.3f} {r['t_collective']:8.3f} "
+            f"{r['dominant']:>10s} {r['t_per_slice_ms']:9.2f} "
+            f"{r['roofline_fraction']:6.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

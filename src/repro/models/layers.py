@@ -1,0 +1,312 @@
+"""Core transformer layers: norms, position encodings, GQA attention, MLP.
+
+Pure JAX (no flax); parameters are nested dicts of arrays; every block
+exposes ``init(key, cfg) -> params`` and
+``apply(params, x, *, cfg, pos, cache, mode) -> (y, cache)`` with
+``mode in {"train", "prefill", "decode"}``.
+
+Supports the variations required by the assigned architectures:
+  * GQA with any kv-head count (incl. MQA kv=1 and MHA kv=H)
+  * qk-norm (qwen3), qkv bias (qwen1.5/codeqwen)
+  * sliding-window ("local") attention (recurrentgemma)
+  * RoPE, M-RoPE (qwen2-vl section-wise), sinusoidal (musicgen), none
+  * gated (SiLU/GeLU) and plain MLPs; RMSNorm and LayerNorm
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- #
+# initialization helpers
+# --------------------------------------------------------------------- #
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape) * std).astype(
+        dtype
+    )
+
+
+def maybe_constrain(x, spec):
+    """Best-effort ``with_sharding_constraint`` (no-op without a mesh).
+
+    Used for the §Perf sharding hints: under the production mesh the
+    constraint anchors XLA's propagation; in single-device tests or
+    meshes lacking the named axes it silently does nothing.
+    """
+    try:
+        from jax.sharding import PartitionSpec as _P
+
+        return jax.lax.with_sharding_constraint(x, _P(*spec))
+    except Exception:  # noqa: BLE001 -- no mesh context / missing axes
+        return x
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+
+
+def norm_init(d, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# position encodings
+# --------------------------------------------------------------------- #
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, *, sections=None, theta: float = 10000.0):
+    """Rotary embedding; ``x``: [B, T, N, hd], positions: [B, T] (int).
+
+    ``sections``: M-RoPE (qwen2-vl) -- tuple of per-section *pair* counts
+    summing to hd//2; ``positions`` then has shape [n_sections, B, T]
+    (temporal / height / width streams; the text stub feeds the same ids to
+    all three, which is exactly M-RoPE's behaviour on text tokens).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    if sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B,T,hd/2]
+    else:
+        assert sum(sections) == hd // 2, (sections, hd)
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            f = freqs[start : start + sec]
+            parts.append(
+                positions[i][..., None].astype(jnp.float32) * f
+            )
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # [B,T,hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    """Classic transformer sinusoidal table, evaluated at ``positions``."""
+    half = d_model // 2
+    freqs = jnp.exp(
+        -math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------- #
+# attention (GQA / MQA / MHA, optional sliding window)
+# --------------------------------------------------------------------- #
+
+
+def attn_init(key, cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd)
+        p["k_norm"] = norm_init(hd)
+    return p
+
+
+def _attn_mask(q_pos, k_pos, window: int):
+    """[.., Tq, Tk] boolean mask: causal, optionally banded."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def attn_apply(p, x, *, cfg, positions, cache=None, mode="train",
+               window: int = 0):
+    """Returns (y, new_cache).
+
+    cache (prefill out / decode in-out):
+      {"k": [B, C, KV, hd], "v": ..., "pos": scalar int32 next-write pos}
+      For windowed attention C == window and writes wrap (rolling buffer).
+    """
+    b, t, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    adt = x.dtype
+
+    q = x @ p["wq"].astype(adt)
+    k = x @ p["wk"].astype(adt)
+    v = x @ p["wv"].astype(adt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(adt)
+        k = k + p["bk"].astype(adt)
+        v = v + p["bv"].astype(adt)
+    q = q.reshape(b, t, h, hd)
+    k = k.reshape(b, t, kv, hd)
+    v = v.reshape(b, t, kv, hd)
+    if cfg.qk_norm:
+        q = norm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = norm_apply(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions)
+        k = apply_rope(k, positions)
+    elif cfg.rope == "mrope":
+        mpos = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_rope(q, mpos, sections=cfg.mrope_sections)
+        k = apply_rope(k, mpos, sections=cfg.mrope_sections)
+
+    scale = 1.0 / math.sqrt(hd)
+    g = h // kv  # query groups per kv head
+
+    if mode == "decode":
+        # t == 1; read rolling/linear cache, write at pos.
+        assert cache is not None
+        c = cache["k"].shape[1]
+        pos = cache["pos"]  # int32 scalar: current write position
+        slot = pos % c if window > 0 else pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype)[:, :1], (0, slot, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype)[:, :1], (0, slot, 0, 0)
+        )
+        if window > 0:
+            base = pos - pos % c
+            k_pos = jnp.arange(c) + base
+            k_pos = jnp.where(k_pos > pos, k_pos - c, k_pos)  # unwrap ring
+        else:
+            k_pos = jnp.arange(c)
+        valid = (k_pos <= pos) & (k_pos > pos - window if window > 0
+                                  else k_pos >= 0)
+        qh = q.reshape(b, 1, kv, g, hd)
+        logits = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+            ck.astype(jnp.float32)
+        ) * scale
+        logits = jnp.where(valid[None, None, None, None, :], logits,
+                           -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv.astype(jnp.float32))
+        o = o.reshape(b, 1, h * hd).astype(adt)
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    else:
+        qh = q.reshape(b, t, kv, g, hd)
+        if cfg.shard_hints and cfg.attn_q_shard:
+            # kv-heads don't divide the model axis: shard the *query time*
+            # dim instead and let scores/softmax/PV inherit it (context
+            # parallelism).  Anchoring the input -- not the score tensor --
+            # keeps XLA's propagation consistent through mask + softmax;
+            # without this XLA partial-sums the [B,kv,g,T,T] fp32 scores
+            # across model (56 GiB AR per layer at 32k prefill;
+            # EXPERIMENTS.md §Perf iteration 3).
+            qh = maybe_constrain(
+                qh, (cfg.dp_axes, "model", None, None, None)
+            )
+        logits = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+            k.astype(jnp.float32)
+        ) * scale
+        if cfg.shard_hints and cfg.attn_heads_merge:
+            # kv doesn't divide the model axis but kv*g does: anchor the
+            # merged head dim so XLA factors the axis across (kv, g).
+            lg2 = logits.reshape(b, kv * g, t, -1)
+            lg2 = maybe_constrain(
+                lg2, (cfg.dp_axes, "model", None, None)
+            )
+            logits = lg2.reshape(b, kv, g, t, -1)
+        elif cfg.shard_hints and not cfg.attn_q_shard:
+            logits = maybe_constrain(
+                logits, (cfg.dp_axes, "model", None, None, None)
+            )
+        mask = _attn_mask(positions, positions, window)  # [B,T,T]
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+        o = o.reshape(b, t, h * hd).astype(adt)
+        new_cache = None
+        if mode == "prefill":
+            c = window if window > 0 else cfg.max_cache
+            cdt = cfg.cache_dtype
+            if window > 0 and t >= c:
+                ck = k[:, t - c :].astype(cdt)
+                cv = v[:, t - c :].astype(cdt)
+                # ring layout: slot = pos % c; ensure slot of next token
+                # (pos=t) lines up: roll so that index (t % c) is oldest.
+                shift = t % c
+                ck = jnp.roll(ck, shift, axis=1)
+                cv = jnp.roll(cv, shift, axis=1)
+            else:
+                pad = c - t
+                ck = jnp.pad(
+                    k.astype(cdt), ((0, 0), (0, pad), (0, 0), (0, 0))
+                )
+                cv = jnp.pad(
+                    v.astype(cdt), ((0, 0), (0, pad), (0, 0), (0, 0))
+                )
+            new_cache = {"k": ck, "v": cv, "pos": jnp.int32(t)}
+    y = o @ p["wo"].astype(adt)
+    return y, new_cache
+
+
+# --------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------- #
+
+
+def mlp_init(key, cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d, f)),
+        "wo": dense_init(ks[1], (f, d)),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], (d, f))
+    return p
+
+
+def mlp_apply(p, x, *, cfg):
+    adt = x.dtype
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = x @ p["wi"].astype(adt)
+    if "wg" in p:
+        h = act(x @ p["wg"].astype(adt)) * h
+    else:
+        h = act(h)
+    return h @ p["wo"].astype(adt)

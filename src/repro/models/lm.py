@@ -1,0 +1,185 @@
+"""LM task heads: loss, train_step, prefill, decode_step.
+
+Two gradient-sync modes (the paper's Sec. III-C + III-D applied to data
+parallelism):
+
+  * ``spmd``  -- plain global-batch pjit; XLA inserts the DP all-reduce.
+  * ``hier``  -- shard_map manual over the DP axes ("data" fast ICI, "pod"
+    slow DCI), auto over "model" (TP stays XLA-managed).  Per-shard grads
+    are cast to the comm dtype with *adaptive normalization* (power-of-two
+    max-norm rescale) and reduced with the hierarchical ladder:
+    reduce-scatter over "data", all-reduce over "pod" at 1/|data| volume,
+    all-gather back -- only locally-reduced data crosses the slow links,
+    exactly the paper's local-reduction trick.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import qcast
+from ..dist.collectives import hierarchical_psum
+from .transformer import forward, init_cache  # noqa: F401
+
+__all__ = [
+    "loss_fn",
+    "make_train_step",
+    "make_hier_train_step",
+    "prefill",
+    "decode_step",
+]
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token cross entropy (+ MoE aux).  batch: tokens or embeds."""
+    inputs = batch["inputs"]
+    labels = batch["labels"]  # [B, T] int32
+    b, t = labels.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    logits, _, aux = forward(
+        params, cfg, inputs, positions=positions, mode="train"
+    )
+    # Predict token t+1 at position t.  Vocab-parallel-safe formulation:
+    # ``lse - target_logit`` rather than materializing log_softmax over
+    # the full vocabulary -- with the unembedding sharded on V, logsumexp
+    # reduces the sharded axis locally (tiny [B,T] all-reduce) whereas the
+    # naive form forced a full [B,T,V] fp32 replication (measured 32 GiB
+    # all-reduce + 44 GB/dev temp at 512 chips; EXPERIMENTS.md §Perf it.1).
+    lg = logits[:, :-1].astype(jnp.float32)
+    tgt = labels[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)  # [B, T-1]
+    # one-hot contraction (not take_along_axis): fuses to a local reduce
+    # over the sharded vocab dim, and avoids an XLA crash when gathered
+    # under partial-manual shard_map (hier grad sync path).
+    onehot = jax.nn.one_hot(tgt, lg.shape[-1], dtype=lg.dtype)
+    tgt_logit = jnp.einsum("btv,btv->bt", lg, onehot)
+    nll = lse - tgt_logit
+    loss = nll.mean()
+    return loss + cfg.moe_aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+def make_train_step(cfg, optimizer):
+    """Global-batch (pjit / spmd) train step."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_hier_train_step(
+    cfg,
+    optimizer,
+    mesh,
+    dp_axes=("data", "pod"),
+    comm_dtype=jnp.bfloat16,
+    adaptive: bool = True,
+):
+    """Paper-style hierarchical mixed-precision gradient sync.
+
+    Returns a function with the same signature as ``make_train_step``'s,
+    to be called under ``jax.jit``; the body is shard_map-manual over
+    ``dp_axes`` and auto over everything else ("model").
+    """
+    from jax.sharding import PartitionSpec as P
+
+    dp_axes = tuple(a for a in dp_axes if a in mesh.shape)
+    ndp = 1
+    for a in dp_axes:
+        ndp *= mesh.shape[a]
+
+    def local_step(params, opt_state, batch):
+        # Per-DP-shard mean loss; no DP reduction inserted by XLA here
+        # (batch dims are shard-local under manual axes).
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+
+        def sync(g):
+            gc, inv = qcast(
+                g, comm_dtype, adaptive=adaptive, axis_name=dp_axes
+            )
+            if jax.default_backend() != "tpu":
+                # XLA CPU backend crashes on bf16 collectives under
+                # partial-manual shard_map ("invalid binary opcode copy").
+                # Quantization already happened in qcast; carry f32 on the
+                # wire here, native narrow dtype on TPU.  Wire-byte
+                # accounting uses the comm dtype analytically.
+                gc = gc.astype(jnp.float32)
+            summed = hierarchical_psum(gc, dp_axes, mode="hier")
+            return summed.astype(jnp.float32) * (inv / ndp)
+
+        grads = jax.tree.map(sync, grads)
+        loss = jax.lax.pmean(loss, dp_axes)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    batch_spec = {"inputs": P(dp_axes), "labels": P(dp_axes)}
+    rep = jax.tree.map(lambda _: P(), {"d": 0})["d"]  # P() replicated
+
+    def specs_like(tree):
+        return jax.tree.map(lambda _: rep, tree)
+
+    def step(params, opt_state, batch):
+        return jax.shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=(
+                specs_like(params), specs_like(opt_state), batch_spec
+            ),
+            out_specs=(
+                specs_like(params),
+                specs_like(opt_state),
+                jax.tree.map(lambda _: rep, {"loss": 0, "nll": 0,
+                                             "aux": 0}),
+            ),
+            axis_names=set(dp_axes),
+            check_vma=False,
+        )(params, opt_state, batch)
+
+    return step
+
+
+def prefill(params, cfg, inputs):
+    """Full-sequence prefill: returns (last-token logits, cache).
+
+    Only the last position is unembedded (``last_token_only``): computing
+    logits for all T positions costs ``T x`` the unembed matmul + its TP
+    collective and is pure waste in serving (measured as the dominant
+    collective in the 32k-prefill dry-runs; EXPERIMENTS.md §Perf it.2).
+    """
+    if cfg.embed_inputs:
+        b, t = inputs.shape
+    else:
+        b, t = inputs.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    logits, cache, _ = forward(
+        params, cfg, inputs, positions=positions, mode="prefill",
+        last_token_only=True,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, cache, token, pos):
+    """One decode step.
+
+    Args:
+      token: [B, 1] int32 (or [B, 1, D] embeds for stub frontends).
+      pos: scalar int32 position of this token.
+
+    Returns (next_token [B, 1], new_cache, logits [B, V]).
+    """
+    b = token.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    logits, new_cache, _ = forward(
+        params, cfg, token, positions=positions, cache=cache, mode="decode"
+    )
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return nxt[:, None], new_cache, logits[:, -1]

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bucketed dispatch.
+
+GShard-style *grouped* dispatch: each sequence (batch row) is a dispatch
+group with its own per-expert capacity buckets, so all scatter/cumsum work
+is local to a group and the whole layer shards cleanly -- groups follow the
+batch (DP) sharding, the batched expert einsum shards over E (expert
+parallelism) or over the ffn dim when E doesn't divide the model axis
+(grok's 8 experts on a 16-wide axis).  Tokens overflowing an expert's
+capacity are dropped (combine weight zero), the standard capacity-factor
+trade-off.
+
+This mirrors the paper's fused-minibatch insight (Sec. III-B): tokens
+routed to one expert are *fused* into a single matmul so the expert weights
+are fetched from HBM once per bucket -- the MoE analogue of reusing the
+sparse matrix across slices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, maybe_constrain
+
+
+def moe_init(key, cfg):
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e)),
+        "wi": dense_init(ks[1], (e, d, f), in_axis=1),
+        "wg": dense_init(ks[2], (e, d, f), in_axis=1),
+        "wo": dense_init(ks[3], (e, f, d), in_axis=1),
+    }
+
+
+def _dispatch_one_group(xf, top_e, top_p, e: int, cap: int):
+    """One group's scatter: xf [T, D], top_e/top_p [T, k].
+
+    Returns (buckets [E, cap, D], tok_idx [T*k], slot [T*k], keep [T*k]).
+    """
+    t, d = xf.shape
+    k = top_e.shape[-1]
+    flat_e = top_e.reshape(-1)  # [T*k] token-major
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1)[
+        jnp.arange(t * k), flat_e
+    ]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, pos_in_e, cap)  # overflow -> trash slot
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    buckets = jnp.zeros((e, cap + 1, d), xf.dtype)
+    buckets = buckets.at[flat_e, slot].set(xf[tok_idx], mode="drop")
+    return buckets[:, :cap], tok_idx, slot, keep
+
+
+def moe_apply(p, x, *, cfg):
+    """x: [B, T, D] -> ([B, T, D], aux_loss scalar)."""
+    b, t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    cap = max(1, int(cfg.moe_capacity_factor * k * t / e))
+    adt = x.dtype
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [B, T, E]
+    top_p, top_e = jax.lax.top_k(probs, k)  # [B, T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    buckets, tok_idx, slot, keep = jax.vmap(
+        lambda xf, te, tp: _dispatch_one_group(xf, te, tp, e, cap)
+    )(x, top_e, top_p)  # buckets [B, E, cap, D]
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    if cfg.shard_hints:
+        # Anchor dispatch to data parallelism (and experts to the model
+        # axis when divisible): XLA's propagation otherwise replicated
+        # the bucket gradient across DP and all-reduced 80 GiB/layer at
+        # 512 chips (EXPERIMENTS.md §Perf iteration 4).
+        espec = "model" if e % 16 == 0 else None
+        buckets = maybe_constrain(
+            buckets, (cfg.dp_axes, espec, None, None)
+        )
+    h = jnp.einsum("becd,edf->becf", buckets, p["wi"].astype(adt))
+    g = jnp.einsum("becd,edf->becf", buckets, p["wg"].astype(adt))
+    out = jnp.einsum("becf,efd->becd", act(g) * h, p["wo"].astype(adt))
+    if cfg.shard_hints:
+        espec = "model" if e % 16 == 0 else None
+        out = maybe_constrain(out, (cfg.dp_axes, espec, None, None))
+
+    def combine(out_b, flat_e, slot_b, keep_b, tok_b, w_b):
+        out_ext = jnp.concatenate(
+            [out_b, jnp.zeros((e, 1, d), out_b.dtype)], axis=1
+        )
+        gathered = out_ext[flat_e, jnp.where(keep_b, slot_b, cap)]
+        w = (w_b * keep_b).astype(adt)
+        return jnp.zeros((t, d), adt).at[tok_b].add(
+            gathered * w[:, None]
+        )
+
+    y = jax.vmap(combine)(
+        out,
+        top_e.reshape(b, -1),
+        slot,
+        keep,
+        tok_idx,
+        top_p.reshape(b, -1),
+    )
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * P_e.
+    frac = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = e * jnp.sum(frac * probs.mean((0, 1)))
+    return y, aux

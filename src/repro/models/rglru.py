@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+Real-Gated Linear Recurrent Unit:
+
+  r_t = sigmoid(x_t W_a + b_a)              (recurrence gate)
+  i_t = sigmoid(x_t W_x + b_x)              (input gate)
+  a_t = exp(c * softplus(Lambda) * (-r_t))  (per-channel decay, c = 8)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` (the recurrence is a linear
+scan h_t = a_t h_{t-1} + b_t, O(log T) depth -- the TPU-friendly form);
+decode is a single step.  The surrounding block follows Griffin: dual
+branches (gate via GeLU, recurrent via conv1d -> RG-LRU), merged and
+projected out.  Temporal conv1d keeps a (width-1)-token state for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+C_FACTOR = 8.0
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    r = cfg.rnn_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": dense_init(ks[0], (d, r)),  # input branch
+        "wy": dense_init(ks[1], (d, r)),  # gate branch
+        "conv": dense_init(ks[2], (cfg.conv_width, r)) * 0.1,
+        "wa": dense_init(ks[3], (r, r)),
+        "ba": jnp.zeros((r,), jnp.float32),
+        "wi": dense_init(ks[4], (r, r)),
+        "bi": jnp.zeros((r,), jnp.float32),
+        # softplus(lam) in ~U[...] so decay a^c spans useful range
+        "lam": jnp.linspace(0.5, 4.0, r, dtype=jnp.float32),
+        "wo": dense_init(ks[5], (r, d)),
+    }
+
+
+def _conv1d(x, w, state=None):
+    """Causal depthwise conv over time; x [B,T,R], w [W,R].
+
+    Returns (y, new_state [B, W-1, R]) -- state carries the last W-1 inputs
+    for streaming decode.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, T+W-1, R]
+    y = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+        for i in range(width)
+    )
+    new_state = xp[:, xp.shape[1] - (width - 1) :]
+    return y, new_state
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan; a,b [B,T,R]."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def op(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(p, x, *, cfg, cache=None, mode="train"):
+    """Returns (y, new_cache); cache = {"h": [B,R], "conv": [B,W-1,R]}."""
+    adt = x.dtype
+    bsz = x.shape[0]
+    r = p["lam"].shape[0]
+
+    gate = jax.nn.gelu(x @ p["wy"].astype(adt))
+    u = x @ p["wx"].astype(adt)
+    u, conv_state = _conv1d(
+        u, p["conv"], None if cache is None else cache["conv"]
+    )
+
+    uf = u.astype(jnp.float32)
+    rgate = jax.nn.sigmoid(uf @ p["wa"] + p["ba"])
+    igate = jax.nn.sigmoid(uf @ p["wi"] + p["bi"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * rgate  # [B,T,R]
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (igate * uf)
+
+    if mode == "decode":
+        h0 = cache["h"]  # [B, R]
+        h = a[:, 0] * h0 + gated_in[:, 0]
+        out = h[:, None]
+        new_cache = {"h": h, "conv": conv_state.astype(jnp.float32)}
+    else:
+        h0 = None if cache is None else cache["h"]
+        out = _lru_scan(a, gated_in, h0)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "h": out[:, -1],
+                "conv": conv_state.astype(jnp.float32),
+            }
+
+    y = (out.astype(adt) * gate) @ p["wo"].astype(adt)
+    return y, new_cache

@@ -1,0 +1,299 @@
+"""Unified decoder assembly: scan-over-layers, heterogeneous block patterns.
+
+Layers are grouped into *periods* (one cycle of ``cfg.block_pattern``);
+full periods are processed under ``jax.lax.scan`` with period-stacked
+parameters (compact HLO -- essential for compiling 62-layer models for 512
+devices), and a trailing partial period is unrolled.  KV caches / recurrent
+states follow the same stacking.
+
+Modes: "train" (full-seq causal, no cache), "prefill" (full-seq, emits
+cache), "decode" (one token, consumes+emits cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .moe import moe_apply, moe_init
+from .rglru import rglru_apply, rglru_init
+from .xlstm import mlstm_apply, mlstm_init, slstm_apply, slstm_init
+
+__all__ = ["init_params", "forward", "init_cache"]
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+
+
+def _layer_init(key, kind: str, cfg):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.norm_init(cfg.d_model, cfg.norm)}
+    if kind in ("attn", "local"):
+        p["attn"] = L.attn_init(ks[0], cfg)
+        p["ln2"] = L.norm_init(cfg.d_model, cfg.norm)
+        p["mix"] = (
+            moe_init(ks[1], cfg) if cfg.moe_experts else L.mlp_init(ks[1], cfg)
+        )
+    elif kind == "rglru":
+        p["rglru"] = rglru_init(ks[0], cfg)
+        p["ln2"] = L.norm_init(cfg.d_model, cfg.norm)
+        p["mix"] = L.mlp_init(ks[1], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg, key):
+    pattern = tuple(cfg.block_pattern)
+    period = len(pattern)
+    n_per, rem = divmod(cfg.n_layers, period)
+    keys = jax.random.split(key, 4)
+    params = {}
+    if cfg.embed_inputs:
+        params["embed"] = L.dense_init(
+            keys[0], (cfg.vocab_size, cfg.d_model), in_axis=1
+        )
+    if not (cfg.tie_embeddings and cfg.embed_inputs):
+        params["unembed"] = L.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size)
+        )
+    params["final_norm"] = L.norm_init(cfg.d_model, cfg.norm)
+
+    if n_per:
+        pkeys = jax.random.split(keys[2], n_per)
+
+        def one_period(k):
+            sub = jax.random.split(k, period)
+            return {
+                f"l{j}": _layer_init(sub[j], pattern[j], cfg)
+                for j in range(period)
+            }
+
+        params["scan"] = jax.vmap(one_period)(pkeys)  # leaves [n_per, ...]
+    if rem:
+        rkeys = jax.random.split(keys[3], rem)
+        params["rem"] = {
+            f"l{j}": _layer_init(rkeys[j], pattern[j], cfg)
+            for j in range(rem)
+        }
+    return params
+
+
+# --------------------------------------------------------------------- #
+# caches
+# --------------------------------------------------------------------- #
+
+
+def _layer_cache(kind: str, cfg, batch: int):
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    if kind in ("attn", "local"):
+        c = cfg.window if kind == "local" else cfg.max_cache
+        return {
+            "k": jnp.zeros((batch, c, kv, hd), cfg.cache_dtype),
+            "v": jnp.zeros((batch, c, kv, hd), cfg.cache_dtype),
+            "pos": jnp.int32(0),
+        }
+    r = cfg.rnn_width or cfg.d_model
+    if kind == "rglru":
+        return {
+            "h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, r), jnp.float32),
+        }
+    if kind == "mlstm":
+        dn = cfg.mlstm_expansion * cfg.d_model
+        nh = cfg.n_heads
+        return {
+            "C": jnp.zeros((batch, nh, dn // nh, dn // nh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dn // nh), jnp.float32),
+            "m": jnp.zeros((batch, nh), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, dn), jnp.float32),
+        }
+    if kind == "slstm":
+        d = cfg.d_model
+        z = lambda: jnp.zeros((batch, d), jnp.float32)  # noqa: E731
+        return {"c": z(), "n": z(), "m": z(), "h": z()}
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int):
+    pattern = tuple(cfg.block_pattern)
+    period = len(pattern)
+    n_per, rem = divmod(cfg.n_layers, period)
+    cache = {}
+    if n_per:
+        cache["scan"] = {
+            f"l{j}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_per,) + x.shape).copy(),
+                _layer_cache(pattern[j], cfg, batch),
+            )
+            for j in range(period)
+        }
+    if rem:
+        cache["rem"] = {
+            f"l{j}": _layer_cache(pattern[j], cfg, batch)
+            for j in range(rem)
+        }
+    return cache
+
+
+# --------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------- #
+
+
+def _layer_apply(kind, p, x, *, cfg, positions, cache, mode):
+    aux = jnp.float32(0.0)
+    h = L.norm_apply(p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        a, c = L.attn_apply(
+            p["attn"], h, cfg=cfg, positions=positions, cache=cache,
+            mode=mode, window=cfg.window if kind == "local" else 0,
+        )
+        x = x + a
+        h2 = L.norm_apply(p["ln2"], x, cfg.norm_eps)
+        if cfg.moe_experts:
+            m, aux = moe_apply(p["mix"], h2, cfg=cfg)
+        else:
+            m = L.mlp_apply(p["mix"], h2, cfg=cfg)
+        x = x + m
+    elif kind == "rglru":
+        a, c = rglru_apply(p["rglru"], h, cfg=cfg, cache=cache, mode=mode)
+        x = x + a
+        h2 = L.norm_apply(p["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mix"], h2, cfg=cfg)
+    elif kind == "mlstm":
+        a, c = mlstm_apply(p["mlstm"], h, cfg=cfg, cache=cache, mode=mode)
+        x = x + a
+    elif kind == "slstm":
+        a, c = slstm_apply(p["slstm"], h, cfg=cfg, cache=cache, mode=mode)
+        x = x + a
+    else:
+        raise ValueError(kind)
+    return x, c, aux
+
+
+def _period_apply(pattern, p, x, *, cfg, positions, cache, mode):
+    new_cache = {}
+    aux = jnp.float32(0.0)
+    for j, kind in enumerate(pattern):
+        c_in = None if cache is None else cache[f"l{j}"]
+        x, c_out, a = _layer_apply(
+            kind, p[f"l{j}"], x, cfg=cfg, positions=positions,
+            cache=c_in, mode=mode,
+        )
+        aux = aux + a
+        if c_out is not None:
+            new_cache[f"l{j}"] = c_out
+    return x, (new_cache or None), aux
+
+
+def forward(params, cfg, inputs, *, positions, cache=None, mode="train",
+            last_token_only: bool = False):
+    """Run the decoder.
+
+    Args:
+      inputs: int tokens [B, T] (``cfg.embed_inputs``) or precomputed
+        embeddings [B, T, D] (vlm/audio frontend stubs).
+      positions: [B, T] int32 global positions.
+      cache: pytree from ``init_cache`` ("decode"), or None.
+      mode: train | prefill | decode.
+      last_token_only: unembed only the final position (serving prefill).
+
+    Returns:
+      (logits [B, T, V] float32, new_cache or None, aux_loss scalar)
+    """
+    adt = cfg.activation_dtype
+    pattern = tuple(cfg.block_pattern)
+    period = len(pattern)
+    n_per, rem = divmod(cfg.n_layers, period)
+
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], inputs, axis=0).astype(adt)
+    else:
+        x = inputs.astype(adt)
+    if cfg.rope == "sinusoidal":
+        x = x + L.sinusoidal_embedding(positions, cfg.d_model).astype(adt)
+
+    aux_total = jnp.float32(0.0)
+    new_cache = {"scan": None, "rem": None}
+
+    if n_per:
+        def body(carry, xs):
+            xx, aux = carry
+            p, c = xs
+            xx, c_new, a = _period_apply(
+                pattern, p, xx, cfg=cfg, positions=positions, cache=c,
+                mode=mode,
+            )
+            return (xx, aux + a), c_new
+
+        if mode == "train" and cfg.remat != "none":
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat == "dots"
+                else None
+            )
+            body = jax.checkpoint(body, policy=policy)
+
+        cache_scan = None if cache is None else cache["scan"]
+        if cfg.scan_layers:
+            if cache_scan is None:
+                # scan requires matching pytree: use params only
+                (x, aux_total), caches = jax.lax.scan(
+                    lambda c, p: body(c, (p, None)),
+                    (x, aux_total),
+                    params["scan"],
+                )
+            else:
+                (x, aux_total), caches = jax.lax.scan(
+                    body, (x, aux_total), (params["scan"], cache_scan)
+                )
+            if mode in ("prefill", "decode") and caches is not None:
+                new_cache["scan"] = caches
+        else:
+            # Unrolled layer stack (dry-run cost fidelity).
+            caches_list = []
+            for i in range(n_per):
+                p_i = jax.tree.map(lambda l: l[i], params["scan"])
+                c_i = (
+                    None
+                    if cache_scan is None
+                    else jax.tree.map(lambda l: l[i], cache_scan)
+                )
+                (x, aux_total), c_new = body((x, aux_total), (p_i, c_i))
+                caches_list.append(c_new)
+            if mode in ("prefill", "decode") and caches_list[0] is not None:
+                new_cache["scan"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *caches_list
+                )
+
+    if rem:
+        rem_pattern = pattern[:rem]
+        cache_rem = None if cache is None else cache["rem"]
+        x, c_new, a = _period_apply(
+            rem_pattern, params["rem"], x, cfg=cfg, positions=positions,
+            cache=cache_rem, mode=mode,
+        )
+        aux_total = aux_total + a
+        new_cache["rem"] = c_new
+
+    if last_token_only:
+        x = x[:, -1:]
+    x = L.norm_apply(params["final_norm"], x, cfg.norm_eps)
+    if "unembed" in params:
+        w = params["unembed"]
+    else:
+        w = params["embed"].T
+    logits = (x @ w.astype(adt)).astype(jnp.float32)
+    out_cache = None
+    if mode in ("prefill", "decode"):
+        out_cache = {k: v for k, v in new_cache.items() if v is not None}
+    return logits, out_cache, aux_total

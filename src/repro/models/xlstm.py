@@ -1,0 +1,213 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows arXiv:2405.04517.  Both use exponential gating with the
+log-domain stabilizer state m_t so gates never overflow:
+
+  mLSTM (per head, head dim = hd):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T     (matrix memory [hd, hd])
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t . q_t|, 1)
+
+  sLSTM (per channel, heads give block-diagonal recurrence):
+    c_t = f_t c_{t-1} + i_t z_t ;  n_t = f_t n_{t-1} + i_t
+    h_t = o_t * c_t / n_t
+
+Sequence processing is a ``lax.scan`` over time (the chunkwise-parallel
+form is a known optimization, recorded as future work in EXPERIMENTS.md
+§Perf notes); decode is one step.  Block wrappers follow the paper:
+mLSTM block = up-proj x2 (gate/value), causal conv on the value path,
+q/k/v from it, cell, gated down-proj; sLSTM block = cell + gated FFN.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .rglru import _conv1d
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dn = cfg.mlstm_expansion * d  # inner width
+    hd = dn // h
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], (d, dn)),
+        "w_gate": dense_init(ks[1], (d, dn)),
+        "conv": dense_init(ks[2], (cfg.conv_width, dn)) * 0.1,
+        "wq": dense_init(ks[3], (dn, dn)),
+        "wk": dense_init(ks[4], (dn, dn)),
+        "wv": dense_init(ks[5], (dn, dn)),
+        "w_if": dense_init(ks[6], (dn, 2 * h)),  # input+forget gates/head
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,)), 3.0 + jnp.arange(h, dtype=jnp.float32)]
+        ),
+        "skip": jnp.ones((dn,), jnp.float32),
+        "w_down": dense_init(ks[7], (dn, d)),
+    }
+
+
+def _mlstm_cell_step(state, qkvif, hd):
+    """One time step.  state = (C [B,H,hd,hd], n [B,H,hd], m [B,H])."""
+    c, n, m = state
+    q, k, v, ig, fg = qkvif  # q/k/v [B,H,hd]; ig/fg [B,H] (pre-activation)
+    log_f = -jax.nn.softplus(-fg)  # log sigmoid
+    m_new = jnp.maximum(log_f + m, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    n = f_p * n + i_p * k
+    c = f_p[..., None] * c + i_p[..., None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    qn = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0
+    )[..., None]
+    h = jnp.einsum("bhde,bhe->bhd", c, q) / qn
+    return (c, n, m_new), h
+
+
+def mlstm_apply(p, x, *, cfg, cache=None, mode="train"):
+    """Returns (y, cache); cache = {C, n, m, conv}."""
+    adt = x.dtype
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    dn = p["w_up"].shape[1]
+    hd = dn // nh
+
+    up = x @ p["w_up"].astype(adt)
+    gate = x @ p["w_gate"].astype(adt)
+    cv, conv_state = _conv1d(
+        up, p["conv"], None if cache is None else cache["conv"]
+    )
+    cv = jax.nn.silu(cv)
+    q = (cv @ p["wq"].astype(adt)).reshape(b, t, nh, hd)
+    k = (cv @ p["wk"].astype(adt)).reshape(b, t, nh, hd) / math.sqrt(hd)
+    v = (up @ p["wv"].astype(adt)).reshape(b, t, nh, hd)
+    gif = cv.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    ig, fg = gif[..., :nh], gif[..., nh:]  # [B,T,H]
+
+    if cache is None:
+        c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.zeros((b, nh), jnp.float32)
+    else:
+        c0, n0, m0 = cache["C"], cache["n"], cache["m"]
+
+    qf, kf, vf = (z.astype(jnp.float32) for z in (q, k, v))
+    if mode == "decode":
+        state, h = _mlstm_cell_step(
+            (c0, n0, m0),
+            (qf[:, 0], kf[:, 0], vf[:, 0], ig[:, 0], fg[:, 0]),
+            hd,
+        )
+        h = h[:, None]
+    else:
+        def step(s, inp):
+            return _mlstm_cell_step(s, inp, hd)
+        state, h = jax.lax.scan(
+            step,
+            (c0, n0, m0),
+            (
+                qf.transpose(1, 0, 2, 3),
+                kf.transpose(1, 0, 2, 3),
+                vf.transpose(1, 0, 2, 3),
+                ig.transpose(1, 0, 2),
+                fg.transpose(1, 0, 2),
+            ),
+        )
+        h = h.transpose(1, 0, 2, 3)  # [B,T,H,hd]
+
+    h = h.reshape(b, -1, dn).astype(adt)
+    h = h + p["skip"].astype(adt) * cv[:, : h.shape[1]]
+    y = (h * jax.nn.silu(gate[:, : h.shape[1]])) @ p["w_down"].astype(adt)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        cc, nn, mm = state
+        new_cache = {
+            "C": cc, "n": nn, "m": mm,
+            "conv": conv_state.astype(jnp.float32),
+        }
+    return y, new_cache
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    ks = jax.random.split(key, 4)
+    f = int(cfg.slstm_ff_factor * d)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d)),  # z, i, f, o pre-acts
+        "r_in": dense_init(ks[1], (d, 4 * d)) * 0.5,  # recurrent (blockwise)
+        "b_in": jnp.concatenate(
+            [
+                jnp.zeros((d,)), jnp.zeros((d,)),
+                jnp.full((d,), 3.0), jnp.zeros((d,)),
+            ]
+        ),
+        "ff_wi": dense_init(ks[2], (d, 2 * f)),
+        "ff_wo": dense_init(ks[3], (f, d)),
+    }
+
+
+def _slstm_cell_step(state, inp, w_r, b):
+    """state = (c, n, m, h_prev) each [B, D]; inp = x_t [B, D] pre-proj."""
+    c, n, m, h_prev = state
+    pre = inp + h_prev @ w_r + b  # [B, 4D]
+    d = c.shape[-1]
+    z = jnp.tanh(pre[:, :d])
+    ig = pre[:, d : 2 * d]
+    fg = pre[:, 2 * d : 3 * d]
+    o = jax.nn.sigmoid(pre[:, 3 * d :])
+    log_f = -jax.nn.softplus(-fg)
+    m_new = jnp.maximum(log_f + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h), h
+
+
+def slstm_apply(p, x, *, cfg, cache=None, mode="train"):
+    """Returns (y, cache); cache = {c, n, m, h}."""
+    adt = x.dtype
+    b, t, d = x.shape
+    pre = (x.astype(jnp.float32)) @ p["w_in"]  # [B,T,4D]
+    if cache is None:
+        state = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(4))
+    else:
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+
+    if mode == "decode":
+        state, h = _slstm_cell_step(state, pre[:, 0], p["r_in"], p["b_in"])
+        h = h[:, None]
+    else:
+        def step(s, inp):
+            return _slstm_cell_step(s, inp, p["r_in"], p["b_in"])
+        state, h = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+        h = h.transpose(1, 0, 2)
+
+    h = h.astype(adt)
+    f2 = p["ff_wi"].shape[1] // 2
+    ff = h @ p["ff_wi"].astype(adt)
+    h = jax.nn.gelu(ff[..., :f2]) * ff[..., f2:]
+    y = h @ p["ff_wo"].astype(adt)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        c, n, m, hh = state
+        new_cache = {"c": c, "n": n, "m": m, "h": hh}
+    return y, new_cache

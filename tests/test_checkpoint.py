@@ -1,0 +1,74 @@
+"""Checkpoint/restart: roundtrip, atomicity, resume, GC."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import (
+    CheckpointManager, latest_step, restore, save,
+)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)),
+                   "b": jnp.zeros((8,))},
+        "opt": {"m": jnp.ones((8, 8)), "count": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 10, t)
+    like = jax.eval_shape(lambda: _tree())
+    r = restore(str(tmp_path), 10, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_publish_no_tmp_visible(tmp_path):
+    save(str(tmp_path), 3, _tree())
+    entries = os.listdir(tmp_path)
+    assert not any(e.endswith(".tmp") for e in entries)
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_gc_keeps_last_k(tmp_path):
+    for s in range(6):
+        save(str(tmp_path), s, _tree(), keep=2)
+    steps = sorted(os.listdir(tmp_path))
+    assert len(steps) == 2 and steps[-1] == "step_000000005"
+
+
+def test_manager_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=2)
+    state = _tree(1)
+    assert not mgr.maybe_save(1, state)
+    assert mgr.maybe_save(2, state)
+    restored, step = mgr.restore_or_init(lambda: _tree(99))
+    assert step == 2
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(state["params"]["w"]),
+    )
+
+
+def test_restore_or_init_fresh(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1)
+    state, step = mgr.restore_or_init(lambda: _tree(5))
+    assert step == 0
+    assert state["opt"]["count"] == 7
+
+
+def test_solver_state_roundtrip(tmp_path):
+    """CG state (x, r, p, iteration) resumes mid-solve."""
+    cg_state = {
+        "x": jnp.ones((16, 4)), "r": jnp.full((16, 4), 0.5),
+        "p": jnp.zeros((16, 4)), "iter": jnp.int32(12),
+    }
+    save(str(tmp_path), 12, cg_state)
+    like = jax.eval_shape(lambda: cg_state)
+    r = restore(str(tmp_path), 12, like)
+    assert int(r["iter"]) == 12

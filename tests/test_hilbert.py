@@ -1,0 +1,82 @@
+"""Properties of the pseudo-Hilbert ordering."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hilbert import (
+    gilbert2d, hilbert_curve_square, hilbert_order, tile_hilbert_order,
+)
+
+sides = st.integers(min_value=1, max_value=23)
+
+
+def test_square_curve_is_contiguous():
+    """On power-of-two squares the curve is a true Hilbert curve."""
+    for order in (1, 2, 3, 4):
+        pts = hilbert_curve_square(order)
+        n = 1 << order
+        assert len(set(map(tuple, pts))) == n * n
+        steps = np.abs(np.diff(pts, axis=0)).sum(axis=1)
+        assert (steps == 1).all(), order
+
+
+@settings(max_examples=40, deadline=None)
+@given(sides, sides)
+def test_pseudo_curve_visits_every_cell_once(w, h):
+    pts = gilbert2d(w, h)
+    assert pts.shape == (w * h, 2)
+    assert len({(int(x), int(y)) for x, y in pts}) == w * h
+    assert pts[:, 0].min() == 0 and pts[:, 0].max() == w - 1
+    assert pts[:, 1].min() == 0 and pts[:, 1].max() == h - 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(sides, sides)
+def test_hilbert_order_is_permutation(w, h):
+    order = hilbert_order(w, h)
+    assert sorted(order.tolist()) == list(range(w * h))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=32),
+    st.integers(min_value=4, max_value=32),
+)
+def test_pseudo_curve_locality(w, h):
+    """The property the decomposition relies on: each quarter of the curve
+    occupies a compact bounding box (not a thin slab)."""
+    pts = gilbert2d(w, h)
+    quarter = max(1, len(pts) // 4)
+    for q in range(4):
+        chunk = pts[q * quarter : (q + 1) * quarter]
+        if len(chunk) < 4:
+            continue
+        area = (
+            (chunk[:, 0].max() - chunk[:, 0].min() + 1)
+            * (chunk[:, 1].max() - chunk[:, 1].min() + 1)
+        )
+        assert area <= 4.0 * len(chunk) + 8, (q, area, len(chunk))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=40),
+    st.integers(min_value=2, max_value=40),
+    st.sampled_from([2, 4, 8]),
+)
+def test_tile_order_is_permutation(rows, cols, tile):
+    perm, _ = tile_hilbert_order(rows, cols, tile)
+    assert sorted(perm.tolist()) == list(range(rows * cols))
+
+
+def test_tile_order_locality():
+    """Contiguous curve chunks form spatially-compact subdomains: the
+    bounding box of each quarter of the curve is far smaller than the
+    full grid (this is what makes hierarchical reduction pay off)."""
+    n, tile = 32, 4
+    perm, _ = tile_hilbert_order(n, n, tile)
+    quarter = len(perm) // 4
+    for q in range(4):
+        cells = perm[q * quarter : (q + 1) * quarter]
+        r, c = cells // n, cells % n
+        area = (r.max() - r.min() + 1) * (c.max() - c.min() + 1)
+        assert area <= 2.5 * quarter, (q, area, quarter)

@@ -1,0 +1,89 @@
+"""Unit tests for the HLO collective parser + roofline arithmetic +
+sharding-hint selection rules (pure functions, no device work)."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (
+    HW, analytic_min_hbm, analyze_collectives, roofline,
+)
+
+
+def test_collective_parser_kinds_and_bytes():
+    hlo = """
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups=[2,8]<=[16]
+  %rs = f32[8,8]{1,0} reduce-scatter(%z), replica_groups={{0,1},{2,3}}
+  %cp = f32[4]{0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+"""
+    out = analyze_collectives(hlo, pod_size=0)
+    assert out["ops"] == 4
+    kinds = out["by_kind"]
+    assert kinds["all-reduce"]["bytes"] == 16 * 1024 * 4
+    # all-gather result / group size = operand
+    assert kinds["all-gather"]["bytes"] == 64 * 128 * 2 // 8
+    # reduce-scatter result * group size = operand
+    assert kinds["reduce-scatter"]["bytes"] == 8 * 8 * 4 * 2
+    assert kinds["collective-permute"]["bytes"] == 16
+
+
+def test_collective_pod_classification():
+    hlo = (
+        "  %a = f32[8]{0} all-reduce(%x), "
+        "replica_groups={{0,256}}, to_apply=%add\n"
+        "  %b = f32[8]{0} all-reduce(%y), "
+        "replica_groups={{0,1}}, to_apply=%add\n"
+    )
+    out = analyze_collectives(hlo, pod_size=256)
+    assert out["dci_bytes"] == 32
+    assert out["ici_bytes"] == 32
+
+
+def test_roofline_terms_and_fraction():
+    r = roofline(
+        flops_dev=HW.peak_flops,  # exactly 1 s of compute
+        hbm_bytes_dev=HW.hbm_bw / 2,  # 0.5 s
+        ici_bytes_dev=0.0,
+        dci_bytes_dev=0.0,
+        useful_flops_dev=HW.peak_flops / 2,
+        hbm_bytes_analytic=HW.hbm_bw / 4,
+    )
+    assert r["dominant"] == "compute"
+    assert abs(r["t_step"] - 1.0) < 1e-9
+    assert abs(r["roofline_fraction"] - 0.5) < 1e-9
+    assert r["dominant_adj"] == "compute"
+    assert abs(r["model_flops_ratio"] - 0.5) < 1e-9
+
+
+def test_analytic_hbm_monotone_in_batch():
+    import types
+
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-4b", max_cache=1024)
+    mesh = types.SimpleNamespace(
+        shape={"data": 16, "model": 16}, size=256
+    )
+    small = analytic_min_hbm(cfg, "train", 16, 1024, mesh)
+    big = analytic_min_hbm(cfg, "train", 64, 1024, mesh)
+    assert big > small > 0
+
+
+def test_hint_rules():
+    import os
+
+    os.environ.setdefault(
+        "XLA_FLAGS", ""
+    )  # _hint_overrides only touches configs
+    from repro.launch.dryrun import _hint_overrides
+
+    # kv divides -> no q-shard, no merge
+    ov = _hint_overrides("codeqwen1.5-7b", ("data",), "train")
+    assert not ov["attn_q_shard"] and not ov["attn_heads_merge"]
+    # prefill with indivisible kv -> q-shard
+    ov = _hint_overrides("deepseek-coder-33b", ("data",), "prefill")
+    assert ov["attn_q_shard"]
+    # train with divisible total heads -> merge
+    ov = _hint_overrides("qwen3-4b", ("data",), "train")
+    assert ov["attn_heads_merge"] and not ov["attn_q_shard"]
+    # MQA -> q-shard even in train
+    ov = _hint_overrides("recurrentgemma-9b", ("data",), "train")
+    assert ov["attn_q_shard"]

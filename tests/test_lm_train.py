@@ -1,0 +1,64 @@
+"""LM training integration: loss decreases; hier grad sync == spmd."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import TokenStream
+from repro.models.lm import make_hier_train_step, make_train_step
+from repro.models.transformer import init_params
+from repro.opt.adam import AdamW
+
+
+def test_loss_decreases_smollm_smoke():
+    cfg = get_config("smollm-135m", smoke=True)
+    opt = AdamW(lr=1e-2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
+    stream = TokenStream(cfg.vocab_size, 32, 8, seed=0)
+    losses = []
+    for s in range(25):
+        params, opt_state, m = step(params, opt_state, stream.batch(s))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+
+def test_hier_grad_sync_matches_spmd_single_device():
+    """On a trivial 1x1x1 mesh the hierarchical mixed-precision gradient
+    sync must reproduce the plain step up to bf16 wire quantization."""
+    cfg = get_config("smollm-135m", smoke=True)
+    opt = AdamW(lr=1e-3, grad_clip=0.0)
+    mesh = jax.make_mesh(
+        (1, 1, 1), ("pod", "data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    stream = TokenStream(cfg.vocab_size, 16, 4, seed=1)
+    batch = stream.batch(0)
+
+    p1, _, m1 = jax.jit(make_train_step(cfg, opt))(
+        params, opt.init(params), batch
+    )
+    p2, _, m2 = jax.jit(make_hier_train_step(cfg, opt, mesh))(
+        params, opt.init(params), batch
+    )
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    l1 = jax.tree.leaves(p1)
+    l2 = jax.tree.leaves(p2)
+    err = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(l1, l2)
+    )
+    assert err < 5e-3, err  # bf16 wire + adaptive normalization
+
+
+def test_adamw_step_sane():
+    opt = AdamW(lr=0.1, grad_clip=0.0)
+    params = {"w": jnp.ones((4,))}
+    st = opt.init(params)
+    grads = {"w": jnp.full((4,), 2.0)}
+    new_p, st = opt.update(grads, st, params)
+    # first Adam step moves by ~lr in the gradient direction
+    np.testing.assert_allclose(
+        np.asarray(new_p["w"]), 1.0 - 0.1, atol=1e-3
+    )

@@ -1,0 +1,79 @@
+"""MoE dispatch: vs an explicit per-token reference implementation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.moe import moe_apply, moe_init
+
+
+def _ref_moe(p, x, cfg):
+    """Slow per-token reference: same top-k, same renorm, NO capacity."""
+    b, t, d = x.shape
+    act = jax.nn.silu
+    out = np.zeros((b, t, d), np.float32)
+    probs = jax.nn.softmax(x.astype(jnp.float32) @ p["router"], axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    for bi in range(b):
+        for ti in range(t):
+            acc = np.zeros(d, np.float32)
+            for kk in range(cfg.moe_top_k):
+                e = int(top_e[bi, ti, kk])
+                xx = np.asarray(x[bi, ti], np.float32)
+                h = xx @ np.asarray(p["wi"][e])
+                g = act(jnp.asarray(xx @ np.asarray(p["wg"][e])))
+                o = (np.asarray(g) * h) @ np.asarray(p["wo"][e])
+                acc += float(top_p[bi, ti, kk]) * o
+            out[bi, ti] = acc
+    return out
+
+
+def test_moe_matches_reference_when_capacity_ample():
+    cfg = get_config(
+        "moonshot-v1-16b-a3b", smoke=True, moe_capacity_factor=8.0
+    )
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, cfg)
+    x = jax.random.normal(key, (2, 12, cfg.d_model), jnp.float32)
+    y, aux = moe_apply(p, x, cfg=cfg)
+    ref = _ref_moe(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_degrade_gracefully():
+    """Tiny capacity must still return finite outputs (dropped tokens get
+    zero contribution, not garbage)."""
+    cfg = get_config(
+        "moonshot-v1-16b-a3b", smoke=True, moe_capacity_factor=0.05
+    )
+    key = jax.random.PRNGKey(1)
+    p = moe_init(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    y, _ = moe_apply(p, x, cfg=cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    # dropped contributions shrink the output norm vs ample capacity
+    cfg2 = get_config(
+        "moonshot-v1-16b-a3b", smoke=True, moe_capacity_factor=8.0
+    )
+    y2, _ = moe_apply(p, x, cfg=cfg2)
+    assert np.linalg.norm(np.asarray(y)) <= np.linalg.norm(
+        np.asarray(y2)
+    ) + 1e-3
+
+
+def test_moe_grad_flows():
+    cfg = get_config("grok-1-314b", smoke=True)
+    key = jax.random.PRNGKey(2)
+    p = moe_init(key, cfg)
+    x = jax.random.normal(key, (1, 8, cfg.d_model), jnp.float32)
+
+    def loss(p):
+        y, aux = moe_apply(p, x, cfg=cfg)
+        return jnp.sum(y**2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    norms = [float(jnp.linalg.norm(v)) for v in jax.tree.leaves(g)]
+    assert all(np.isfinite(norms))
+    assert sum(norms) > 0

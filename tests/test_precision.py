@@ -1,0 +1,52 @@
+"""Mixed precision: adaptive normalization properties (paper III-C)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.precision import POLICIES, adaptive_scale, get_policy, qcast
+
+
+def test_policies_registry():
+    for name in ("double", "single", "half", "mixed", "mixed_bf16"):
+        p = get_policy(name)
+        assert p.name == name
+    assert POLICIES["mixed"].adaptive
+    assert POLICIES["mixed"].storage_bytes == 2
+    assert POLICIES["single"].comm_bytes == 4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=1e-30, max_value=1e30))
+def test_adaptive_scale_is_power_of_two(mag):
+    x = jnp.asarray([mag, -mag / 3], jnp.float32)
+    s = float(adaptive_scale(x))
+    assert s > 0
+    m = np.log2(s)
+    assert abs(m - round(m)) < 1e-6  # lossless power-of-two factor
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=1e-25, max_value=1e25))
+def test_adaptive_scale_steers_to_target(mag):
+    x = jnp.asarray([mag], jnp.float32)
+    s = float(adaptive_scale(x, target=256.0))
+    assert 128.0 <= mag * s <= 512.0  # within one octave of target
+
+
+def test_qcast_roundtrip_protects_small_values():
+    """Values that underflow a plain fp16 cast survive adaptive qcast."""
+    x = jnp.asarray([3e-6, 5e-6, -4e-6], jnp.float32)
+    plain = x.astype(jnp.float16).astype(jnp.float32)
+    assert float(jnp.abs(plain).max()) < 6e-6  # heavy quantization
+    q, inv = qcast(x, jnp.float16, adaptive=True)
+    back = q.astype(jnp.float32) * inv
+    np.testing.assert_allclose(
+        np.asarray(back), np.asarray(x), rtol=1e-3
+    )
+
+
+def test_qcast_wide_dtype_is_identity():
+    x = jnp.asarray([1.0, 2.0], jnp.float32)
+    q, inv = qcast(x, jnp.float32, adaptive=True)
+    assert float(inv) == 1.0
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
