@@ -4,6 +4,9 @@ Computed exactly from the partition plan's footprints (no wall time --
 the paper's Table IV is a volume table).  Levels map Summit -> TPU:
 socket -> minor ICI axis, node -> major ICI axis, global -> inter-pod.
 
+Per-level volumes come from the same ``dist.CommPlan`` the runtime
+executes -- one model for benchmarks, roofline sweeps and collectives:
+
   direct       every device sends its full dense partial row space
   hier         reduce-scatter ladder: level L carries volume / prod(faster)
   sparse       footprint-compressed exchange (beyond-paper): only rows
@@ -19,6 +22,7 @@ from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import (
     PartitionConfig, build_plan, build_sparse_exchange,
 )
+from repro.dist import Topology
 
 from .common import emit
 
@@ -35,21 +39,29 @@ def run(n: int = 64, p_data: int = 16, fuse: int = 16,
                         nnz_per_stage=16),
         a=a,
     )
-    # hierarchy fan-out: fast x slow levels for p_data devices
-    fast = int(np.sqrt(p_data))
+    # hierarchy fan-out: fast x slow levels exactly factoring p_data
+    # (largest divisor <= sqrt, so topo.n_data == p_data and the sparse
+    # peer count matches the real exchange group)
+    fast = max(
+        d for d in range(1, int(np.sqrt(p_data)) + 1) if p_data % d == 0
+    )
     slow = p_data // fast
+    topo = Topology.from_sizes(
+        [("model", fast, "ici"), ("data", slow, "ici")]
+    )
     comm_b = 2  # half-precision wire (paper Sec. III-C)
     for name, op in (("proj", plan.proj), ("back", plan.back)):
         rows = op.n_rows_pad
         dense = rows * fuse * comm_b  # per-device dense partial
         # direct: full partial crosses the slowest level
-        direct_slow = dense
-        # hier: fast level carries the full volume, slow level 1/fast
-        hier_fast = dense
-        hier_slow = dense / fast
+        direct_slow = topo.plan("direct").slow_link_bytes(dense)
+        # hier ladder: per-level volumes straight off the plan
+        hier_fast, hier_slow = topo.plan("hier").level_bytes(dense)
         # sparse: only footprint rows travel (max pair volume x peers)
-        send, _, v = build_sparse_exchange(op)
-        sparse_total = p_data * v * fuse * comm_b
+        _, _, v = build_sparse_exchange(op)
+        sparse_total = topo.plan(
+            "sparse", pair_slots=v, dense_rows=rows
+        ).level_bytes(dense)[0]
         foot = float(np.mean([r.size for r in op.foot_rows]))
         emit(
             f"comm_volumes/{name}/direct", 0.0,

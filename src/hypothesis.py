@@ -1,0 +1,137 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` library.
+
+The test environment pins no ``hypothesis`` wheel, but the property tests
+only use a narrow slice of its API: ``@given`` over ``st.integers``,
+``st.floats`` and ``st.sampled_from``, throttled by ``@settings``.  This
+module implements that slice as a *deterministic* example sweep (seeded
+draws + range endpoints), which keeps the properties exercised and the
+suite reproducible.
+
+If a real ``hypothesis`` distribution is importable from anywhere else on
+``sys.path`` (e.g. CI installs it), this module steps aside and re-exports
+the real thing, so installing hypothesis transparently upgrades the tests
+to true property-based search.
+"""
+from __future__ import annotations
+
+import functools
+import importlib.util
+import math
+import os
+import sys
+
+# --------------------------------------------------------------------- #
+# defer to a real installation when one exists
+# --------------------------------------------------------------------- #
+
+
+def _find_real():
+    here = os.path.dirname(os.path.abspath(__file__))
+    paths = [
+        p for p in sys.path
+        if os.path.abspath(p or os.getcwd()) != here
+    ]
+    try:
+        from importlib.machinery import PathFinder
+
+        return PathFinder.find_spec("hypothesis", paths)
+    except Exception:  # pragma: no cover - defensive
+        return None
+
+
+_real_spec = _find_real()
+if _real_spec is not None and _real_spec.submodule_search_locations:
+    _mod = importlib.util.module_from_spec(_real_spec)
+    sys.modules[__name__] = _mod
+    _real_spec.loader.exec_module(_mod)
+else:
+    # ----------------------------------------------------------------- #
+    # the shim proper
+    # ----------------------------------------------------------------- #
+    class _Strategy:
+        """Deterministic example generator: fixed must-cover values first
+        (range endpoints / every member), then seeded random draws.
+
+        Strategies are stateless, so one module-level strategy object can
+        back any number of ``@given`` tests.
+        """
+
+        def __init__(self, cover, draw):
+            self._cover = tuple(cover)
+            self._draw = draw  # (rng) -> value
+
+        def examples(self, n: int, rng):
+            out = list(self._cover[:n])
+            out.extend(self._draw(rng) for _ in range(n - len(out)))
+            return out
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = -(2**31) if min_value is None else int(min_value)
+            hi = 2**31 - 1 if max_value is None else int(max_value)
+            return _Strategy(
+                (lo, hi) if hi != lo else (lo,),
+                lambda rng: int(rng.integers(lo, hi + 1)),
+            )
+
+        @staticmethod
+        def floats(min_value=None, max_value=None, **_kw):
+            lo = -1e30 if min_value is None else float(min_value)
+            hi = 1e30 if max_value is None else float(max_value)
+
+            def draw(rng):
+                if lo > 0 and hi / max(lo, 1e-300) > 1e3:
+                    # wide positive range: log-uniform, matching the real
+                    # library's bias toward varied magnitudes
+                    return math.exp(rng.uniform(math.log(lo), math.log(hi)))
+                return float(rng.uniform(lo, hi))
+
+            return _Strategy((lo, hi), draw)
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(
+                elems, lambda rng: elems[int(rng.integers(len(elems)))]
+            )
+
+    st = strategies
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        """Attach the example budget to an (already-@given-wrapped) test."""
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                import zlib
+
+                import numpy as np
+
+                n = getattr(wrapper, "_shim_max_examples", 20)
+                # crc32, not hash(): str hashing is salted per process
+                columns = [
+                    s.examples(n, np.random.default_rng(
+                        zlib.crc32(f"{fn.__name__}:{i}".encode())
+                    ))
+                    for i, s in enumerate(strats)
+                ]
+                for row in zip(*columns):
+                    fn(*args, *row, **kwargs)
+
+            # Strategy args are filled here, not by pytest: hide the
+            # inner signature so they are not mistaken for fixtures.
+            import inspect
+
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

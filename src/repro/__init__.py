@@ -1,0 +1,14 @@
+"""Petascale XCT reproduction: distributed 3D image reconstruction in JAX.
+
+Subpackages:
+  core     -- geometry, partitioning, precision, solver, reconstruction
+  dist     -- topology-aware hierarchical communication (Topology/CommPlan)
+  kernels  -- Pallas blocked-ELL SpMM + pure-jnp oracles
+  models   -- LM substrate exercising the same communication machinery
+  launch   -- drivers: recon, train, serve, dry-run lowering, perf sweeps
+"""
+from . import _compat
+
+_compat.install()
+
+__version__ = "0.1.0"

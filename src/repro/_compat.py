@@ -1,0 +1,96 @@
+"""Runtime compatibility with the installed jax (0.4.x LTS line).
+
+The codebase is written against the modern jax surface -- ``jax.shard_map``
+with ``check_vma`` / partial-manual ``axis_names``, ``jax.sharding.AxisType``
+and ``jax.make_mesh(..., axis_types=...)``.  The deployment image pins
+jax 0.4.37, where the same functionality lives under
+``jax.experimental.shard_map`` (``check_rep`` / ``auto``) and meshes carry
+no axis types at all (every axis behaves like today's ``Auto``).
+
+``install()`` bridges the gap *in the jax namespace* so that call sites --
+including test scripts that build meshes directly -- run unmodified on
+either version.  Each shim is installed only when the attribute is
+missing, so on a modern jax this module is a no-op.
+
+Imported for its side effect from ``repro/__init__.py``.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+__all__ = ["install"]
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params:
+        return
+    _orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None,
+                  axis_types=None):
+        # 0.4.x meshes have no axis-type concept; every axis is usable
+        # both under jit (auto) and shard_map (manual), which is exactly
+        # the ``Auto`` semantics the callers request.
+        del axis_types
+        return _orig(axis_shapes, axis_names, devices=devices)
+
+    make_mesh.__wrapped__ = _orig
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+                  check_vma=True, axis_names=None, **kwargs):
+        """Modern-signature wrapper over ``jax.experimental.shard_map``.
+
+        ``check_vma`` maps to the old ``check_rep``; ``axis_names`` (the
+        set of *manual* axes) maps to its complement ``auto`` (the set of
+        axes left to the compiler).
+        """
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma, auto=auto, **kwargs
+        )
+
+    jax.shard_map = shard_map
+
+
+def _install_pallas_params() -> None:
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception:  # pragma: no cover - pallas unavailable
+        return
+    if not hasattr(pltpu, "CompilerParams") and hasattr(
+        pltpu, "TPUCompilerParams"
+    ):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+    _install_pallas_params()

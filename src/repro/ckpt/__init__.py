@@ -1,0 +1,1 @@
+"""Checkpointing with atomic publish and elastic restore."""

@@ -19,7 +19,14 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Precision", "POLICIES", "get_policy", "adaptive_scale", "qcast"]
+__all__ = [
+    "Precision",
+    "POLICIES",
+    "get_policy",
+    "adaptive_scale",
+    "adaptive_scale_cols",
+    "qcast",
+]
 
 
 @dataclasses.dataclass(frozen=True)

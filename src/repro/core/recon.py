@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 
 import jax
@@ -23,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..dist.collectives import reduce_partials, sparse_exchange
+from ..dist import Topology
+from ..dist.collectives import sparse_exchange
 from ..kernels.ops import apply_operator
 from .hilbert import hilbert_argsort  # noqa: F401  (re-export convenience)
 from .partition import Plan, build_sparse_exchange
@@ -46,14 +48,18 @@ class ReconConfig:
 
 
 class Reconstructor:
-    """Distributed iterative reconstruction bound to a mesh.
+    """Distributed iterative reconstruction bound to a mesh topology.
 
     Args:
       plan: partition plan (``core.partition.build_plan``).
-      mesh: JAX mesh; default = 1-device mesh (plan must have n_data == 1).
-      data_axes: mesh axes carrying in-slice data parallelism, fast -> slow
-        (their size product must equal ``plan.cfg.n_data``).
-      batch_axes: mesh axes carrying slice batch parallelism.
+      topology: ``dist.Topology`` naming the communicating (data) and
+        batch mesh axes -- ``Topology.from_mesh(mesh, data_axes=...,
+        batch_axes=...)``.  The data levels' size product must equal
+        ``plan.cfg.n_data``.
+      mesh: [deprecated path] JAX mesh; default = 1-device mesh (plan
+        must have n_data == 1).  Ignored when ``topology`` is given.
+      data_axes, batch_axes: [deprecated] loose axis tuples; pass a
+        ``topology`` instead (see docs/dist_api.md).
       cfg: runtime configuration.
     """
 
@@ -61,29 +67,58 @@ class Reconstructor:
         self,
         plan: Plan,
         mesh=None,
-        data_axes=("model",),
-        batch_axes=("data",),
+        data_axes=None,
+        batch_axes=None,
         cfg: ReconConfig = ReconConfig(),
         abstract: bool = False,
+        topology: Topology | None = None,
     ):
-        if mesh is None:
-            mesh = jax.make_mesh(
-                (1, 1), ("data", "model"), devices=jax.devices()[:1]
+        if topology is None:
+            if data_axes is not None or batch_axes is not None:
+                warnings.warn(
+                    "Reconstructor(data_axes=..., batch_axes=...) is "
+                    "deprecated; pass topology=Topology.from_mesh(mesh, "
+                    "data_axes=..., batch_axes=...) instead",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            if mesh is None:
+                mesh = jax.make_mesh(
+                    (1, 1), ("data", "model"), devices=jax.devices()[:1]
+                )
+            topology = Topology.from_mesh(
+                mesh,
+                data_axes=("model",) if data_axes is None
+                else tuple(data_axes),
+                batch_axes=("data",) if batch_axes is None
+                else tuple(batch_axes),
+            )
+        elif mesh is not None or data_axes is not None \
+                or batch_axes is not None:
+            raise ValueError(
+                "pass either topology= or the deprecated "
+                "mesh/data_axes/batch_axes, not both"
+            )
+        if topology.mesh is None:
+            raise ValueError(
+                "Reconstructor needs a mesh-bound topology "
+                "(Topology.from_mesh)"
             )
         self.plan = plan
-        self.mesh = mesh
+        self.topology = topology
+        self.mesh = mesh = topology.mesh
         self.cfg = cfg
         self.abstract = abstract
-        self.data_axes = tuple(data_axes)
-        self.batch_axes = tuple(batch_axes)
+        self.data_axes = topology.data_axes
+        self.batch_axes = topology.batch_axes
         self.policy = get_policy(cfg.precision)
-        p_mesh = math.prod(mesh.shape[a] for a in self.data_axes)
-        if p_mesh != plan.cfg.n_data:
+        self.comm_plan = topology.plan(cfg.comm_mode)
+        if topology.n_data != plan.cfg.n_data:
             raise ValueError(
                 f"plan has P_d={plan.cfg.n_data} but data axes "
-                f"{self.data_axes} have size {p_mesh}"
+                f"{self.data_axes} have size {topology.n_data}"
             )
-        self.n_batch = math.prod(mesh.shape[a] for a in self.batch_axes)
+        self.n_batch = topology.n_batch
         self._rank_rows = None  # lazy inverse row permutation
         self._rank_cols = None
         self._fns: dict = {}
@@ -199,6 +234,8 @@ class Reconstructor:
                     blocks_per_call=cfg.blocks_per_call,
                 )
 
+            comm_plan = self.comm_plan
+
             def reduce(band):
                 bandc, inv = qcast(
                     band,
@@ -211,7 +248,7 @@ class Reconstructor:
                         bandc,
                         a[f"{prefix}_send"][0],
                         a[f"{prefix}_recv"][0],
-                        daxes,
+                        self.topology,
                         rows_out,
                     )
                 else:
@@ -223,7 +260,7 @@ class Reconstructor:
                         .at[idx]
                         .add(bandc, mode="drop")
                     )
-                    chunk = reduce_partials(full, daxes, mode=cfg.comm_mode)
+                    chunk = comm_plan.reduce_partials(full)
                 return chunk.astype(jnp.float32) * inv
 
             narrow = (

@@ -1,0 +1,1 @@
+"""Deterministic data sources: token streams and XCT phantoms."""

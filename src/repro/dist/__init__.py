@@ -1,0 +1,53 @@
+"""Topology-aware hierarchical communication (paper Sec. III-B).
+
+The paper reduces partial sinograms/tomograms with a *hierarchy* of
+communicators matched to the machine's links: first among GPUs that share
+a socket, then across sockets within a node, then across nodes -- each
+rung a faster, smaller reduction whose output is all the slower rung must
+carry.  On TPU meshes the rungs map onto mesh axes:
+
+  paper level   mesh axis   link class        production role
+  -----------   ---------   ---------------   -------------------------
+  socket        "model"     minor ICI (fast)  in-slice data parallelism
+  node          "data"      major ICI         data parallelism
+  global        "pod"       DCI (slow)        outermost / multi-pod
+
+(see ``launch.mesh.mesh_axis_classes``).  :class:`Topology` declares that
+ladder once; :class:`CommPlan` resolves a reduction mode
+(``direct | rs | hier | sparse``) against it into a schedule of per-level
+collectives plus a per-level wire-volume model.  The runtime entry points
+(:func:`reduce_partials`, :func:`sparse_exchange`,
+:func:`hierarchical_psum`) and the volume accounting in benchmarks are
+all views over the same plan.
+
+Submodules:
+  topology     Topology / CommPlan / Level (the ladder engine)
+  collectives  shard_map-level reductions and the sparse exchange
+  sharding     parameter / batch / cache PartitionSpecs
+  fault        stragglers, rebalancing, remesh, checkpoint cadence
+"""
+from .collectives import (  # noqa: F401
+    hierarchical_psum,
+    reduce_partials,
+    sparse_exchange,
+)
+from .topology import (  # noqa: F401
+    CommPlan,
+    CommStep,
+    Level,
+    LINK_CLASSES,
+    MODES,
+    Topology,
+)
+
+__all__ = [
+    "Topology",
+    "CommPlan",
+    "CommStep",
+    "Level",
+    "LINK_CLASSES",
+    "MODES",
+    "reduce_partials",
+    "sparse_exchange",
+    "hierarchical_psum",
+]

@@ -1,0 +1,115 @@
+"""Runtime collectives: thin views over the :class:`CommPlan` ladder.
+
+All three entry points must be called *inside* ``shard_map`` with the
+topology's data axes manual.  They accept either a :class:`Topology`
+(preferred -- carries link classes and static sizes) or a bare tuple of
+mesh axis names, fast -> slow (legacy call sites), which is promoted to a
+mesh-less topology resolved for schedule only.
+
+  reduce_partials    dense partial [rows_pad, F] -> owned chunk
+                     (direct | rs | hier)
+  sparse_exchange    footprint-compressed banded exchange (sparse)
+  hierarchical_psum  all-reduce semantics for gradient sync
+                     (direct | rs | hier)
+
+Half-precision wire formats are the caller's choice: cast with
+``core.precision.qcast`` (adaptive normalization) before the exchange and
+multiply the inverse scale back after -- see ``core/recon.py`` and
+``models/lm.py`` for the canonical pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .topology import CommPlan, LINK_CLASSES, Topology
+
+__all__ = ["reduce_partials", "sparse_exchange", "hierarchical_psum"]
+
+
+def _as_topology(topo_or_axes) -> Topology:
+    if isinstance(topo_or_axes, Topology):
+        return topo_or_axes
+    if isinstance(topo_or_axes, str):
+        topo_or_axes = (topo_or_axes,)
+    return Topology.from_sizes(
+        [(a, _axis_size(a), LINK_CLASSES.get(a, "ici"))
+         for a in topo_or_axes]
+    )
+
+
+def _axis_size(axis: str) -> int:
+    """Static size of a named axis, resolvable inside a shard_map trace."""
+    return int(jax.lax.psum(1, axis))
+
+
+def reduce_partials(x, topo_or_axes, *, mode: str = "hier"):
+    """Reduce per-device dense partials to each device's owned chunk.
+
+    Args:
+      x: [rows_pad, F] dense partial (rows_pad divisible by the group
+        size; the scatter-add in ``core/recon.py`` produces exactly this).
+      topo_or_axes: Topology, or mesh axis names fast -> slow.
+      mode: direct | rs | hier.
+
+    Returns:
+      [rows_pad / n_data, F] owned chunk, ordered by
+      ``jax.lax.axis_index(axes)``.
+    """
+    topo = _as_topology(topo_or_axes)
+    return topo.plan(mode).reduce_partials(x)
+
+
+def hierarchical_psum(x, topo_or_axes, *, mode: str = "hier"):
+    """All-reduce with the plan's schedule (gradient sync).
+
+    ``hier`` realizes the paper's ladder -- reduce-scatter the fast
+    levels, all-reduce the slowest at reduced volume, all-gather back --
+    on backends whose partitioner supports scatter collectives under
+    partially-manual shard_map (TPU); elsewhere it degrades to one
+    all-reduce per level (identical values).
+    """
+    topo = _as_topology(topo_or_axes)
+    return topo.plan(mode).psum(x)
+
+
+def sparse_exchange(band, send_idx, recv_idx, topo_or_axes, rows_out: int):
+    """Footprint-compressed banded exchange (plan mode "sparse").
+
+    Each device's SpMM emits partials only for the virtual-row band its
+    shard touches (an O(1/sqrt(P)) subset of global rows -- paper Fig.
+    6-7).  Instead of densifying and reducing, ship exactly those entries
+    to their owners with one all-to-all over the static tables built by
+    ``core.partition.build_sparse_exchange``.
+
+    Args:
+      band: [flat_rows, F] virtual-row partials of this device.
+      send_idx: [P, V] this device's rows (band slots) destined for each
+        peer; padding slots point at ``flat_rows``.
+      recv_idx: [P, V] owned-chunk row for each incoming slot, per peer;
+        padding points at ``rows_out`` (trash row).
+      topo_or_axes: Topology or axis names (fast -> slow) spanning the
+        P = n_data exchange group.
+      rows_out: rows of the owned output chunk.
+
+    Returns:
+      [rows_out, F] owned chunk with all incoming partials scatter-added.
+    """
+    topo = _as_topology(topo_or_axes)
+    axes = topo.data_axes
+    # Pad with one zero row so padding send slots contribute nothing.
+    band_pad = jnp.concatenate(
+        [band, jnp.zeros((1, band.shape[1]), band.dtype)], axis=0
+    )
+    msgs = jnp.take(band_pad, send_idx, axis=0)  # [P, V, F]
+    # all_to_all: row p of msgs goes to peer p; we receive [P, V, F] where
+    # row p came from peer p.
+    got = jax.lax.all_to_all(
+        msgs, axes, split_axis=0, concat_axis=0, tiled=True
+    )
+    # Scatter-add into owned chunk (+ trash row for padding slots).
+    out = jnp.zeros((rows_out + 1, band.shape[1]), band.dtype)
+    out = out.at[recv_idx.reshape(-1)].add(
+        got.reshape(-1, band.shape[1]), mode="drop"
+    )
+    return out[:rows_out]

@@ -1,0 +1,97 @@
+"""Parameter / batch / cache PartitionSpecs for the LM substrate.
+
+One rule, applied uniformly (megatron-style tensor parallelism): every
+matrix-like parameter shards its largest eligible dimension over the
+``model`` mesh axis; vectors, scalars and indivisible shapes replicate.
+Scan-stacked parameter leaves (leading ``n_per`` period dimension, see
+``models.transformer.init_params``) never shard the stacking dimension.
+
+Batch-like trees shard their leading (batch) dimension over the data-
+parallel axes.  All functions return *specs* (pytrees of PartitionSpec);
+``shardings`` binds them to a mesh as NamedShardings.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "shardings"]
+
+
+def _ndim_shape(leaf):
+    shape = tuple(getattr(leaf, "shape", ()))
+    return len(shape), shape
+
+
+def _model_spec(leaf, model_axis: str, size: int):
+    ndim, shape = _ndim_shape(leaf)
+    if ndim < 2 or size <= 1:
+        return P()
+    # Candidate dims: all but a leading stack dim when ndim >= 3
+    # (scan-stacked layers / MoE expert stacks keep dim 0 whole).
+    start = 1 if ndim >= 3 else 0
+    best, best_size = None, 0
+    for i in range(start, ndim):
+        if shape[i] % size == 0 and shape[i] >= best_size:
+            best, best_size = i, shape[i]  # ties -> later dim wins
+    if best is None:
+        return P()
+    return P(*(model_axis if i == best else None for i in range(ndim)))
+
+
+def param_specs(params, mesh, model_axis: str = "model"):
+    """PartitionSpec tree for a parameter pytree (tensor parallelism)."""
+    size = dict(mesh.shape).get(model_axis, 1)
+    return jax.tree.map(
+        lambda leaf: _model_spec(leaf, model_axis, size), params
+    )
+
+
+def batch_specs(batch, mesh, dp_axes=("pod", "data")):
+    """Shard each leaf's leading dimension over the data-parallel axes
+    (when divisible); everything else replicates."""
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+
+    def spec(leaf):
+        ndim, shape = _ndim_shape(leaf)
+        if not dp or ndim == 0 or shape[0] % ndp:
+            return P()
+        return P(*((dp,) + (None,) * (ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache, cfg, mesh, dp_axes=("pod", "data")):
+    """PartitionSpec tree for a decode cache (``transformer.init_cache``).
+
+    Cache leaves are batch-major -- ``[B, ...]`` under ``rem``, stacked
+    ``[n_per, B, ...]`` under ``scan`` -- so the batch dimension position
+    depends on the subtree; leaves too small to split replicate.
+    """
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+
+    def spec(path, leaf):
+        ndim, shape = _ndim_shape(leaf)
+        stacked = bool(path) and getattr(path[0], "key", None) == "scan"
+        b_dim = 1 if stacked else 0
+        if not dp or ndim <= b_dim or shape[b_dim] % ndp:
+            return P()
+        parts = [None] * ndim
+        parts[b_dim] = dp
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def shardings(specs, mesh):
+    """Bind a spec tree to a mesh: pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

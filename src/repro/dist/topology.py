@@ -1,0 +1,390 @@
+"""Declarative communication topology: ``Topology`` and ``CommPlan``.
+
+The paper's hierarchical communication (Sec. III-B) exploits the fact that
+a fat node's links form a ladder of speeds: GPUs on one socket talk over
+NVLink, sockets within a node over the host bus, and nodes over the
+interconnect.  On TPU meshes the same ladder is minor-ICI / major-ICI /
+DCI.  A :class:`Topology` names that ladder once -- an ordered (fast ->
+slow) list of :class:`Level`, each a mesh axis with a link class -- and a
+:class:`CommPlan` resolves a requested reduction *mode* against it into a
+schedule of per-level collectives plus a per-level wire-volume model.
+
+Everything downstream is a view over the plan: the runtime collectives
+(:mod:`repro.dist.collectives`), the volume accounting in
+``benchmarks/bench_comms.py`` (paper Table IV), and the roofline sweeps.
+
+Modes
+-----
+  direct   one all-reduce over the joint device group; every level's link
+           carries the full dense partial.
+  rs       one reduce-scatter over the joint group (flat; all links carry
+           the full volume, but each device ends with only its chunk).
+  hier     the paper's ladder: reduce-scatter level by level, fast ->
+           slow; level ``i`` carries ``1 / prod(size of faster levels)``
+           of the dense partial -- the local-reduction trick that shrinks
+           slow-link traffic by 58-64% in the paper's runs.
+  sparse   footprint-compressed all-to-all (beyond-paper): only rows that
+           carry partial sums travel, using the static tables from
+           ``core.partition.build_sparse_exchange``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Level",
+    "Topology",
+    "CommStep",
+    "CommPlan",
+    "MODES",
+    "LINK_CLASSES",
+]
+
+MODES = ("direct", "rs", "hier", "sparse")
+
+# Canonical link class per production mesh axis: the minor ICI axis is
+# the paper's "socket", the major ICI axis its "node", DCI its "global"
+# level.  ``launch.mesh.mesh_axis_classes`` derives from this table.
+LINK_CLASSES = {"model": "ici", "data": "ici", "pod": "dci"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Level:
+    """One rung of the communication ladder (fast -> slow order)."""
+
+    axis: str  # mesh axis name
+    size: int  # devices along this axis
+    link: str  # "ici" | "dci"
+    paper_level: str  # "socket" | "node" | "global"
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A mesh's communicating axes, ordered fast -> slow, plus the axes
+    that carry communication-free (batch) parallelism.
+
+    Build with :meth:`from_mesh` (binds a jax Mesh, required for running
+    collectives) or :meth:`from_sizes` (pure accounting, e.g. volume
+    tables for a machine that is not attached).
+    """
+
+    levels: tuple  # tuple[Level, ...], fast -> slow
+    batch_axes: tuple = ()
+    mesh: object = None  # jax Mesh | None
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_mesh(
+        cls,
+        mesh,
+        data_axes: Sequence[str] = ("model",),
+        batch_axes: Sequence[str] = ("data",),
+        link_classes: dict | None = None,
+    ) -> "Topology":
+        """Build from a jax Mesh.
+
+        ``data_axes`` (fast -> slow) carry the in-slice partial-data
+        reduction; ``batch_axes`` carry slice/batch parallelism and never
+        communicate.  ``link_classes`` maps axis -> "ici" | "dci";
+        defaults come from the canonical :data:`LINK_CLASSES` table.
+        """
+        links = dict(LINK_CLASSES)
+        links.update(link_classes or {})
+        data_axes = tuple(data_axes)
+        for a in data_axes + tuple(batch_axes):
+            if a not in mesh.shape:
+                raise ValueError(
+                    f"axis {a!r} not in mesh axes {tuple(mesh.shape)}"
+                )
+        levels = _make_levels(
+            [(a, mesh.shape[a], links.get(a, "ici")) for a in data_axes]
+        )
+        return cls(
+            levels=levels, batch_axes=tuple(batch_axes), mesh=mesh
+        )
+
+    @classmethod
+    def from_sizes(cls, sizes: Sequence) -> "Topology":
+        """Meshless topology from ``[(axis, size, link), ...]`` fast ->
+        slow (link defaults to "ici" for 2-tuples)."""
+        norm = [
+            (s[0], int(s[1]), s[2] if len(s) > 2 else "ici")
+            for s in sizes
+        ]
+        return cls(levels=_make_levels(norm))
+
+    # ------------------------------------------------------------------ #
+    # interrogation
+    # ------------------------------------------------------------------ #
+    @property
+    def data_axes(self) -> tuple:
+        """Communicating mesh axes, fast -> slow."""
+        return tuple(lv.axis for lv in self.levels)
+
+    @property
+    def n_data(self) -> int:
+        """Total devices in the reduction group."""
+        return math.prod(lv.size for lv in self.levels)
+
+    @property
+    def n_batch(self) -> int:
+        if self.mesh is None:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.batch_axes)
+
+    def plan(self, mode: str, *, pair_slots: int | None = None,
+             dense_rows: int | None = None) -> "CommPlan":
+        """Resolve ``mode`` into a :class:`CommPlan`.
+
+        ``sparse`` additionally needs the exchange-table pair capacity
+        ``pair_slots`` (V of ``build_sparse_exchange``) and ``dense_rows``
+        (padded global rows) to model wire volume; runtime execution works
+        without them.
+        """
+        return CommPlan.resolve(
+            self, mode, pair_slots=pair_slots, dense_rows=dense_rows
+        )
+
+    def describe(self) -> str:
+        """Human-readable ladder summary (one line per level)."""
+        rows = [
+            f"  {lv.paper_level:>6s}: axis {lv.axis!r} x{lv.size} "
+            f"({lv.link})"
+            for lv in self.levels
+        ]
+        head = (
+            f"Topology over {self.n_data} devices"
+            + (f", batch axes {self.batch_axes}" if self.batch_axes
+               else "")
+        )
+        return "\n".join([head] + rows)
+
+
+def _make_levels(sizes) -> tuple:
+    """Assign paper levels: fastest ICI axis = socket, later ICI = node,
+    DCI = global."""
+    levels = []
+    for i, (axis, size, link) in enumerate(sizes):
+        if link == "dci":
+            paper = "global"
+        elif i == 0:
+            paper = "socket"
+        else:
+            paper = "node"
+        levels.append(
+            Level(axis=axis, size=int(size), link=link, paper_level=paper)
+        )
+    return tuple(levels)
+
+
+# --------------------------------------------------------------------- #
+# plans
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class CommStep:
+    """One collective of a resolved schedule.
+
+    ``wire_frac`` is the fraction of the dense per-device partial that
+    crosses this step's (slowest) link, per device -- reduce-semantics
+    accounting as in the paper's Table IV, not ring-hop counting.
+    """
+
+    op: str  # all_reduce | reduce_scatter | all_gather | all_to_all
+    axes: tuple  # mesh axes the collective spans
+    link: str  # slowest link class crossed
+    wire_frac: float
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """A reduction mode resolved against a topology.
+
+    ``steps`` is the execution schedule (consumed by
+    ``dist.collectives``); ``level_fracs`` is the per-level wire-volume
+    model (consumed by benchmarks and the roofline sweeps): entry ``i`` is
+    the fraction of the dense partial that crosses level ``i``'s link.
+    """
+
+    topology: Topology
+    mode: str
+    steps: tuple  # tuple[CommStep, ...]
+    level_fracs: tuple  # tuple[float, ...], aligned with topology.levels
+
+    # ------------------------------------------------------------------ #
+    # resolution
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def resolve(cls, topo: Topology, mode: str, *,
+                pair_slots: int | None = None,
+                dense_rows: int | None = None) -> "CommPlan":
+        if mode not in MODES:
+            raise ValueError(f"unknown comm mode {mode!r}; one of {MODES}")
+        levels = topo.levels
+        axes = topo.data_axes
+        slowest = levels[-1].link if levels else "ici"
+        if mode == "direct":
+            steps = (CommStep("all_reduce", axes, slowest, 1.0),)
+            fracs = tuple(1.0 for _ in levels)
+        elif mode == "rs":
+            steps = (CommStep("reduce_scatter", axes, slowest, 1.0),)
+            fracs = tuple(1.0 for _ in levels)
+        elif mode == "hier":
+            steps, fracs = [], []
+            frac = 1.0
+            for lv in levels:
+                steps.append(
+                    CommStep("reduce_scatter", (lv.axis,), lv.link, frac)
+                )
+                fracs.append(frac)
+                frac /= lv.size
+            steps, fracs = tuple(steps), tuple(fracs)
+        else:  # sparse
+            if pair_slots is not None and dense_rows:
+                frac = topo.n_data * pair_slots / float(dense_rows)
+            else:
+                frac = float("nan")  # volume model needs the tables
+            steps = (CommStep("all_to_all", axes, slowest, frac),)
+            fracs = tuple(frac for _ in levels)
+        return cls(
+            topology=topo, mode=mode, steps=steps, level_fracs=fracs
+        )
+
+    # ------------------------------------------------------------------ #
+    # volume model (paper Table IV)
+    # ------------------------------------------------------------------ #
+    def level_bytes(self, dense_bytes: float) -> tuple:
+        """Per-level wire bytes for one reduction of a ``dense_bytes``
+        partial, aligned with ``topology.levels``."""
+        return tuple(f * dense_bytes for f in self.level_fracs)
+
+    def wire_bytes_by_link(self, dense_bytes: float) -> dict:
+        """Aggregate wire bytes per link class ("ici" / "dci")."""
+        out: dict = {}
+        for lv, b in zip(self.topology.levels,
+                         self.level_bytes(dense_bytes)):
+            out[lv.link] = out.get(lv.link, 0.0) + b
+        return out
+
+    def slow_link_bytes(self, dense_bytes: float) -> float:
+        """Bytes crossing the slowest (last) level's link -- the quantity
+        the paper's hierarchical scheme minimizes."""
+        return self.level_bytes(dense_bytes)[-1]
+
+    def describe(self) -> str:
+        lines = [f"CommPlan(mode={self.mode!r})"]
+        for s in self.steps:
+            lines.append(
+                f"  {s.op:>14s} over {s.axes} [{s.link}] "
+                f"wire x{s.wire_frac:.4g}"
+            )
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------------ #
+    # ladder engine (call inside shard_map over the manual data axes)
+    # ------------------------------------------------------------------ #
+    def reduce_partials(self, x):
+        """Dense partial [rows_pad, F] -> this device's owned chunk
+        [rows_pad / n_data, F].
+
+        Chunk ownership follows ``jax.lax.axis_index(data_axes)``
+        linearization (first axis major), matching the partition plan's
+        device order under a ``PartitionSpec((data_axes,))`` sharding.
+        """
+        if self.mode == "sparse":
+            raise ValueError(
+                "sparse mode reduces via dist.collectives.sparse_exchange"
+                " (needs the static footprint tables)"
+            )
+        axes = self.topology.data_axes
+        p = self.topology.n_data
+        if x.shape[0] % p:
+            raise ValueError(
+                f"rows {x.shape[0]} not divisible by group size {p}"
+            )
+        for step in self.steps:
+            if step.op == "all_reduce":
+                x = jax.lax.psum(x, step.axes)
+                i = jax.lax.axis_index(axes)
+                x = jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // p), x.shape[0] // p, axis=0
+                )
+            elif step.op == "reduce_scatter":
+                x = jax.lax.psum_scatter(
+                    x, step.axes, scatter_dimension=0, tiled=True
+                )
+            else:  # pragma: no cover - resolve() emits only the above
+                raise AssertionError(step.op)
+        return x
+
+    def psum(self, x):
+        """All-reduce semantics (same shape out, fully summed), scheduled
+        per the plan.
+
+        ``hier`` lowers to reduce-scatter fast levels / all-reduce the
+        slowest / all-gather back (the paper's gradient-sync ladder) when
+        the backend supports scatter collectives under partially-manual
+        shard_map; elsewhere it falls back to one all-reduce per level
+        (identical values, hierarchical schedule, full volume on every
+        link -- the fallback is a correctness path, not a perf path).
+        """
+        axes = self.topology.data_axes
+        if not axes:
+            return x
+        if self.mode == "direct" or len(axes) == 1:
+            return jax.lax.psum(x, axes)
+        if self.mode == "sparse":
+            raise ValueError("sparse mode has no psum form")
+        if not _scatter_collectives_ok():
+            for lv in self.topology.levels:
+                x = jax.lax.psum(x, lv.axis)
+            return x
+        if self.mode == "rs":
+            return _rs_ag_psum(x, [axes], self.topology.n_data)
+        # hier: scatter down the fast levels, all-reduce the slowest
+        fast_levels = self.topology.levels[:-1]
+        return _rs_ag_psum(
+            x,
+            [(lv.axis,) for lv in fast_levels],
+            math.prod(lv.size for lv in fast_levels),
+            last=self.topology.levels[-1].axis,
+        )
+
+
+def _scatter_collectives_ok() -> bool:
+    # XLA:CPU's SPMD partitioner aborts on reduce-scatter / all-gather
+    # inside partially-manual shard_map (observed through 0.4.x); TPU is
+    # the paper target and handles them.
+    return jax.default_backend() == "tpu"
+
+
+def _rs_ag_psum(x, scatter_groups, group: int, last: str | None = None):
+    """Flatten-pad ladder: reduce-scatter each group (fast -> slow),
+    optionally all-reduce ``last``, then all-gather back in reverse.
+    ``group`` is the static product of all scattered axis sizes."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % group
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((pad,), flat.dtype)]
+        )
+    for axes in scatter_groups:
+        flat = jax.lax.psum_scatter(
+            flat, axes, scatter_dimension=0, tiled=True
+        )
+    if last is not None:
+        flat = jax.lax.psum(flat, last)
+    for axes in reversed(scatter_groups):
+        flat = jax.lax.all_gather(flat, axes, axis=0, tiled=True)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)

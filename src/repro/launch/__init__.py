@@ -1,0 +1,1 @@
+"""Drivers: reconstruction, training, serving, dry-run lowering, perf sweeps."""

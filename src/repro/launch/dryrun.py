@@ -305,6 +305,8 @@ def lower_xct_cell(dataset: str, multi_pod: bool, iters: int = 2) -> dict:
     from ..core.partition import PartitionConfig, estimate_plan
     from ..core.recon import ReconConfig, Reconstructor
 
+    from ..dist import Topology
+
     ds = DATASETS[dataset]
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.size
@@ -325,10 +327,10 @@ def lower_xct_cell(dataset: str, multi_pod: bool, iters: int = 2) -> dict:
     plan = estimate_plan(geo, pcfg)
     rcfg = ReconConfig(precision="mixed_bf16", comm_mode="hier", fuse=16,
                        use_ref=True)
-    rec = Reconstructor(
-        plan, mesh=mesh, data_axes=data_axes,
-        batch_axes=batch_axes, cfg=rcfg, abstract=True,
+    topo = Topology.from_mesh(
+        mesh, data_axes=data_axes, batch_axes=batch_axes
     )
+    rec = Reconstructor(plan, topology=topo, cfg=rcfg, abstract=True)
     n_batch = rec.n_batch
     y_slices = rcfg.fuse * n_batch  # one fused I/O batch per batch group
     t0 = time.time()

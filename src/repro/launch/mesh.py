@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import jax
 
+from ..dist.topology import LINK_CLASSES
+
 __all__ = ["make_production_mesh", "mesh_axis_classes"]
 
 
@@ -24,8 +26,10 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def mesh_axis_classes(multi_pod: bool = False) -> dict:
-    """Link-speed class per axis (used by the roofline collective model)."""
-    base = {"data": "ici", "model": "ici"}
-    if multi_pod:
-        base["pod"] = "dci"
-    return base
+    """Link-speed class per axis (used by the roofline collective model).
+
+    Derived from the canonical ``dist.topology.LINK_CLASSES`` table so
+    mesh construction and Topology volume attribution cannot drift.
+    """
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {a: LINK_CLASSES[a] for a in axes}

@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..ckpt.checkpoint import CheckpointManager
 from ..configs import get_config
 from ..data.tokens import TokenStream
+from ..dist import Topology
 from ..dist.fault import StragglerMonitor, suggest_checkpoint_period
 from ..dist.sharding import param_specs, shardings
 from ..models.lm import make_hier_train_step, make_train_step
@@ -78,6 +79,12 @@ def main(argv=None):
     )
 
     if args.grad_comm == "hier":
+        # same axis filter as make_hier_train_step, so the printed plan
+        # is the one the step actually syncs over
+        dp = tuple(a for a in ("data", "pod") if a in mesh.shape)
+        topo = Topology.from_mesh(mesh, data_axes=dp, batch_axes=())
+        print(topo.describe())
+        print(topo.plan("hier").describe())
         step_fn = make_hier_train_step(cfg, opt, mesh)
     else:
         step_fn = make_train_step(cfg, opt)

@@ -1,0 +1,1 @@
+"""Neural architecture substrate: transformer, MoE, recurrent blocks, LM heads."""

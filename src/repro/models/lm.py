@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.precision import qcast
+from ..dist import Topology
 from ..dist.collectives import hierarchical_psum
 from .transformer import forward, init_cache  # noqa: F401
 
@@ -91,9 +92,10 @@ def make_hier_train_step(
     from jax.sharding import PartitionSpec as P
 
     dp_axes = tuple(a for a in dp_axes if a in mesh.shape)
-    ndp = 1
-    for a in dp_axes:
-        ndp *= mesh.shape[a]
+    # DP ladder: "data" is the fast (major-ICI) level, "pod" the slow
+    # (DCI) one; TP stays on "model" outside the topology (XLA-managed).
+    topo = Topology.from_mesh(mesh, data_axes=dp_axes, batch_axes=())
+    ndp = topo.n_data
 
     def local_step(params, opt_state, batch):
         # Per-DP-shard mean loss; no DP reduction inserted by XLA here
@@ -113,7 +115,7 @@ def make_hier_train_step(
                 # wire here, native narrow dtype on TPU.  Wire-byte
                 # accounting uses the comm dtype analytically.
                 gc = gc.astype(jnp.float32)
-            summed = hierarchical_psum(gc, dp_axes, mode="hier")
+            summed = hierarchical_psum(gc, topo, mode="hier")
             return summed.astype(jnp.float32) * (inv / ndp)
 
         grads = jax.tree.map(sync, grads)
@@ -126,6 +128,15 @@ def make_hier_train_step(
 
     def specs_like(tree):
         return jax.tree.map(lambda _: rep, tree)
+
+    if jax.default_backend() == "tpu":
+        manual_axes = set(dp_axes)  # TP stays XLA-managed (auto)
+    else:
+        # XLA:CPU's SPMD partitioner check-fails (IsManualSubgroup) on
+        # partially-manual shard_map; go fully manual off-TPU.  The
+        # "model" axis then carries replicated compute inside the step
+        # -- identical values, no tensor parallelism on this backend.
+        manual_axes = set(mesh.axis_names)
 
     def step(params, opt_state, batch):
         return jax.shard_map(
@@ -140,7 +151,7 @@ def make_hier_train_step(
                 jax.tree.map(lambda _: rep, {"loss": 0, "nll": 0,
                                              "aux": 0}),
             ),
-            axis_names=set(dp_axes),
+            axis_names=manual_axes,
             check_vma=False,
         )(params, opt_state, batch)
 

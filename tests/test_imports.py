@@ -1,0 +1,47 @@
+"""Import sweep: every module under ``src/repro`` must import.
+
+A missing submodule (e.g. the ``repro.dist`` package absent from the
+seed) used to surface only as a collection error of whichever test
+happened to import it first; this sweep pins the failure to the module
+itself.
+"""
+import importlib
+import os
+import pkgutil
+
+import pytest
+
+import repro
+
+
+def _iter_modules():
+    return sorted(
+        m.name
+        for m in pkgutil.walk_packages(repro.__path__, prefix="repro.")
+    )
+
+
+MODULES = _iter_modules()
+
+
+def test_sweep_is_nonempty():
+    # Guard the walker itself: a packaging regression that hides the
+    # tree would otherwise pass the sweep vacuously.
+    assert len(MODULES) > 30, MODULES
+    assert "repro.dist.collectives" in MODULES
+
+
+@pytest.mark.parametrize("name", MODULES)
+def test_module_imports(name):
+    # launch.dryrun mutates XLA_FLAGS at import (it wants 512 fake
+    # devices before jax init); importing it here is safe because jax is
+    # already initialized, but keep the env clean for later tests.
+    before = os.environ.get("XLA_FLAGS")
+    try:
+        importlib.import_module(name)
+    finally:
+        if os.environ.get("XLA_FLAGS") != before:
+            if before is None:
+                os.environ.pop("XLA_FLAGS", None)
+            else:
+                os.environ["XLA_FLAGS"] = before
