@@ -34,7 +34,16 @@ import scipy.sparse as sp
 from .geometry import XCTGeometry, build_system_matrix
 from .hilbert import tile_hilbert_order
 
-__all__ = ["PartitionConfig", "OperatorShards", "Plan", "build_plan"]
+__all__ = [
+    "PartitionConfig",
+    "OperatorShards",
+    "Plan",
+    "build_plan",
+    "build_sparse_exchange",
+    "build_hier_sparse_exchange",
+    "estimate_hier_sparse",
+    "exchange_volume_params",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -330,6 +339,7 @@ def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
             nnz=int(nnz_total),
         )
         op.est_v = v  # type: ignore[attr-defined]
+        op.est_foot = foot  # type: ignore[attr-defined]
         return op
 
     proj = one(geo.n_rays, geo.n_vox, sino_chunk, tomo_chunk)
@@ -381,3 +391,164 @@ def build_sparse_exchange(
         send[p, q, : rows.size] = flat
         recv[q, p, : rows.size] = rows - q * rpd
     return send, recv, v
+
+
+def build_hier_sparse_exchange(
+    op: OperatorShards, fast: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, int]:
+    """Static tables for the *hierarchical* footprint exchange
+    (plan mode ``hier-sparse``).
+
+    Devices are linearized fast-axis-major (``p = f * n_slow + t``, as in
+    ``jax.lax.axis_index(data_axes)``): a *socket* ``t`` is the group of
+    ``G = fast`` devices that share the fast link.  Socket members' band
+    footprints overlap (paper Fig. 6-7: nearby Hilbert chunks shadow the
+    same output rows), so instead of every member shipping its own copy
+    across the slow links (flat ``sparse``), the socket first merges:
+
+      stage 1   every member scatter-adds its band into the socket's
+                *merged band* -- the union of member footprints, laid out
+                grouped by the owner device's fast index ``f`` and padded
+                to ``W`` rows per group -- and a reduce-scatter over the
+                fast axis leaves member ``f`` holding group ``f``, fully
+                summed within the socket (the dedup: overlapping rows
+                cross the fast link once instead of the slow link
+                ``G`` times);
+      stage 2   member ``f``'s group contains exactly the rows owned by
+                devices ``(f, t')``, so one sparse all-to-all over the
+                *slow* axes delivers every row straight to its owner --
+                no post-exchange intra-socket routing;
+      stage 3   the owner scatter-adds received slots into its chunk.
+
+    Returns ``(socket_map [P, flat_rows], send2 [P, n_slow, V2],
+    recv2 [P, n_slow, V2], W, V2)``:
+
+      socket_map  merged-band slot per local band slot (trash = G*W)
+      send2       per slow peer, slots of my W-group to ship (pad = W)
+      recv2       owned-chunk row per incoming slot (pad = rows_per_dev)
+    """
+    P = op.inds.shape[0]
+    if P % fast:
+        raise ValueError(f"fast size {fast} does not divide P={P}")
+    G, n_slow = fast, P // fast
+    rpd = op.rows_per_dev
+    # per-device valid (band slot, global row) from the virtual-row map
+    dev_slots, dev_rows = [], []
+    for p in range(P):
+        rm = op.row_map[p].reshape(-1)
+        sl = np.flatnonzero(rm < op.n_rows_pad)
+        dev_slots.append(sl)
+        dev_rows.append(rm[sl].astype(np.int64))
+
+    # merged band per socket: union of member rows, grouped by the owner's
+    # fast index (monotone in row, so the union stays sorted per group)
+    sockets = []  # per t: (uniq_rows, owner_fast, group_starts)
+    w = 1
+    for t in range(n_slow):
+        allr = np.concatenate(
+            [dev_rows[f * n_slow + t] for f in range(G)]
+        )
+        uniq = np.unique(allr)
+        owner_f = (uniq // rpd) // n_slow
+        counts = np.bincount(owner_f, minlength=G)
+        w = max(w, int(counts.max()))
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        sockets.append((uniq, owner_f, starts))
+    w = _pad_to(w, 8)
+
+    flat_rows = op.flat_rows
+    socket_map = np.full((P, flat_rows), G * w, dtype=np.int32)
+    for p in range(P):
+        t = p % n_slow
+        uniq, owner_f, starts = sockets[t]
+        if dev_rows[p].size == 0:
+            continue
+        i = np.searchsorted(uniq, dev_rows[p])
+        socket_map[p, dev_slots[p]] = (
+            owner_f[i] * w + (i - starts[owner_f[i]])
+        ).astype(np.int32)
+
+    # stage 2: per (socket t, fast f), the W-group rows split by the
+    # owner's slow index; sender (f, t) block t' pairs with receiver
+    # (f, t') block t
+    v2 = 1
+    group_rows: dict[tuple[int, int], list] = {}
+    for t in range(n_slow):
+        uniq, owner_f, starts = sockets[t]
+        for f in range(G):
+            rows = uniq[owner_f == f]  # W-group of member (f, t), sorted
+            owner_t = (rows // rpd) % n_slow
+            per_peer = [
+                (np.flatnonzero(owner_t == t2), rows[owner_t == t2])
+                for t2 in range(n_slow)
+            ]
+            group_rows[(f, t)] = per_peer
+            if per_peer:
+                v2 = max(v2, max(w_.size for w_, _ in per_peer))
+    v2 = _pad_to(v2, 8)
+
+    send2 = np.full((P, n_slow, v2), w, dtype=np.int32)
+    recv2 = np.full((P, n_slow, v2), rpd, dtype=np.int32)
+    for p in range(P):
+        f, t = p // n_slow, p % n_slow
+        for t2, (slots, rows) in enumerate(group_rows[(f, t)]):
+            send2[p, t2, : slots.size] = slots
+            q = f * n_slow + t2  # receiver of this block
+            recv2[q, t, : rows.size] = rows - q * rpd
+    return socket_map, send2, recv2, w, v2
+
+
+def estimate_hier_sparse(
+    op: OperatorShards, fast: int, n_slow: int
+) -> tuple[int, int]:
+    """Estimated ``(W, V2)`` for abstract plans (no tables built).
+
+    Socket members' footprints are modeled as independent draws of
+    ``est_foot`` rows from the padded row space, so the merged band is
+    ``R * (1 - (1 - foot/R)^G)`` rows -- the union shrinks towards ``R``
+    as footprints overlap.  ``V2`` carries the usual ~1.6x imbalance
+    margin over the even split of a W-group across slow peers.
+    """
+    rows = float(op.n_rows_pad)
+    foot = float(getattr(op, "est_foot", 0.0)) or 1.8 * rows / math.sqrt(
+        max(1, fast * n_slow)
+    )
+    union = rows * (1.0 - (1.0 - min(1.0, foot / rows)) ** fast)
+    w = _pad_to(max(8, int(math.ceil(union / fast))), 8)
+    v2 = _pad_to(max(8, int(1.6 * w / max(1, n_slow))), 8)
+    return w, v2
+
+
+def exchange_volume_params(op: OperatorShards, topo) -> dict:
+    """Wire-volume parameters for ``Topology.plan(mode, **params)``.
+
+    One call covers every mode (``direct``/``rs``/``hier`` ignore the
+    extras): ``pair_slots`` (flat sparse V), ``merged_rows`` (hier-sparse
+    G*W) and ``cross_rows`` (n_slow*V2) plus ``dense_rows``.  Exact table
+    capacities when the operator carries real shards; the analytic
+    estimates (``est_v`` / :func:`estimate_hier_sparse`) for abstract
+    ``estimate_plan`` shards.
+    """
+    fast = topo.levels[0].size if topo.levels else 1
+    n_slow = max(1, topo.n_data // fast)
+    # building the exact tables is O(P^2 V); memoize per ladder shape so
+    # sweeps interrogating many (mode, fuse) cells pay it once
+    cache = getattr(op, "_volume_params", None)
+    if cache is None:
+        cache = {}
+        op._volume_params = cache  # type: ignore[attr-defined]
+    key = (fast, n_slow)
+    if key not in cache:
+        if isinstance(op.row_map, np.ndarray):
+            _, _, v = build_sparse_exchange(op)
+            _, _, _, w, v2 = build_hier_sparse_exchange(op, fast)
+        else:
+            v = int(getattr(op, "est_v", 8))
+            w, v2 = estimate_hier_sparse(op, fast, n_slow)
+        cache[key] = {
+            "pair_slots": v,
+            "dense_rows": op.n_rows_pad,
+            "merged_rows": fast * w,
+            "cross_rows": n_slow * v2,
+        }
+    return dict(cache[key])

@@ -4,7 +4,8 @@
 ``project`` / ``backproject`` / ``reconstruct``.  The whole CG solve runs
 inside one ``shard_map``: per-device blocked-ELL SpMM (Pallas kernel) ->
 mixed-precision cast with adaptive normalization -> partial-data reduction
-(direct / reduce-scatter / hierarchical / sparse footprint exchange) ->
+(direct / reduce-scatter / hierarchical / sparse footprint exchange /
+hierarchical-sparse socket-deduplicated exchange) ->
 CGNR update, with slice-minibatches software-pipelined so reductions overlap
 the next minibatch's kernel (paper Fig. 8).
 
@@ -28,7 +29,12 @@ from ..dist import Topology
 from ..dist.collectives import sparse_exchange
 from ..kernels.ops import apply_operator
 from .hilbert import hilbert_argsort  # noqa: F401  (re-export convenience)
-from .partition import Plan, build_sparse_exchange
+from .partition import (
+    Plan,
+    build_hier_sparse_exchange,
+    build_sparse_exchange,
+    estimate_hier_sparse,
+)
 from .pipeline import pipelined_apply
 from .precision import adaptive_scale_cols, get_policy, qcast
 from .solver import cgnr
@@ -39,7 +45,7 @@ __all__ = ["ReconConfig", "Reconstructor"]
 @dataclasses.dataclass(frozen=True)
 class ReconConfig:
     precision: str = "mixed"  # paper ladder: double|single|half|mixed (+bf16)
-    comm_mode: str = "hier"  # direct | rs | hier | sparse
+    comm_mode: str = "hier"  # direct | rs | hier | sparse | hier-sparse
     fuse: int = 16  # paper's minibatch size (FFACTOR)
     overlap: bool = True  # Fig. 8 pipelining
     use_ref: bool = False  # oracle instead of Pallas kernel
@@ -168,6 +174,10 @@ class Reconstructor:
     def _device_arrays(self):
         pol = self.policy
         plan = self.plan
+        mode = self.cfg.comm_mode
+        fast = self.topology.levels[0].size if self.topology.levels else 1
+        n_slow = max(1, self.topology.n_data // fast)
+        self._socket_rows: dict = {}  # static W per operator (hier-sparse)
         arrs = {}
         for name, op in (("proj", plan.proj), ("back", plan.back)):
             if self.abstract:
@@ -178,18 +188,34 @@ class Reconstructor:
                 arrs[f"{name}_row_map"] = sds(
                     op.row_map.shape, jnp.int32
                 )
-                if self.cfg.comm_mode == "sparse":
-                    p = op.inds.shape[0]
+                p = op.inds.shape[0]
+                if mode == "sparse":
                     v = getattr(op, "est_v", 8)
                     arrs[f"{name}_send"] = sds((p, p, v), jnp.int32)
                     arrs[f"{name}_recv"] = sds((p, p, v), jnp.int32)
+                elif mode == "hier-sparse":
+                    w, v2 = estimate_hier_sparse(op, fast, n_slow)
+                    self._socket_rows[name] = w
+                    arrs[f"{name}_smap"] = sds(
+                        (p, op.flat_rows), jnp.int32
+                    )
+                    arrs[f"{name}_send"] = sds((p, n_slow, v2), jnp.int32)
+                    arrs[f"{name}_recv"] = sds((p, n_slow, v2), jnp.int32)
                 continue
             arrs[f"{name}_inds"] = op.inds
             arrs[f"{name}_vals"] = op.vals.astype(pol.storage)
             arrs[f"{name}_winmap"] = op.winmap
             arrs[f"{name}_row_map"] = op.row_map
-            if self.cfg.comm_mode == "sparse":
+            if mode == "sparse":
                 send, recv, _ = build_sparse_exchange(op)
+                arrs[f"{name}_send"] = send
+                arrs[f"{name}_recv"] = recv
+            elif mode == "hier-sparse":
+                smap, send, recv, w, _ = build_hier_sparse_exchange(
+                    op, fast
+                )
+                self._socket_rows[name] = w
+                arrs[f"{name}_smap"] = smap
                 arrs[f"{name}_send"] = send
                 arrs[f"{name}_recv"] = recv
         return arrs
@@ -243,13 +269,20 @@ class Reconstructor:
                     adaptive=pol.adaptive,
                     axis_name=daxes,
                 )
-                if cfg.comm_mode == "sparse":
+                if cfg.comm_mode in ("sparse", "hier-sparse"):
+                    hier = cfg.comm_mode == "hier-sparse"
                     chunk = sparse_exchange(
                         bandc,
                         a[f"{prefix}_send"][0],
                         a[f"{prefix}_recv"][0],
                         self.topology,
                         rows_out,
+                        socket_map=(
+                            a[f"{prefix}_smap"][0] if hier else None
+                        ),
+                        socket_rows=(
+                            self._socket_rows[prefix] if hier else None
+                        ),
                     )
                 else:
                     # scatter-ADD: split rows (virtual-row packing) may
@@ -309,6 +342,8 @@ class Reconstructor:
         op_names = ["inds", "vals", "winmap", "row_map"]
         if self.cfg.comm_mode == "sparse":
             op_names += ["send", "recv"]
+        elif self.cfg.comm_mode == "hier-sparse":
+            op_names += ["send", "recv", "smap"]
         arr_specs = {
             f"{pre}_{nm}": d for pre in ("proj", "back") for nm in op_names
         }

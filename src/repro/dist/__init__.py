@@ -14,8 +14,8 @@ carry.  On TPU meshes the rungs map onto mesh axes:
 
 (see ``launch.mesh.mesh_axis_classes``).  :class:`Topology` declares that
 ladder once; :class:`CommPlan` resolves a reduction mode
-(``direct | rs | hier | sparse``) against it into a schedule of per-level
-collectives plus a per-level wire-volume model.  The runtime entry points
+(``direct | rs | hier | sparse | hier-sparse``) against it into a
+schedule of per-level collectives plus a per-level wire-volume model.  The runtime entry points
 (:func:`reduce_partials`, :func:`sparse_exchange`,
 :func:`hierarchical_psum`) and the volume accounting in benchmarks are
 all views over the same plan.

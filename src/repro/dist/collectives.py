@@ -8,7 +8,8 @@ mesh-less topology resolved for schedule only.
 
   reduce_partials    dense partial [rows_pad, F] -> owned chunk
                      (direct | rs | hier)
-  sparse_exchange    footprint-compressed banded exchange (sparse)
+  sparse_exchange    footprint-compressed banded exchange
+                     (sparse | hier-sparse)
   hierarchical_psum  all-reduce semantics for gradient sync
                      (direct | rs | hier)
 
@@ -73,43 +74,94 @@ def hierarchical_psum(x, topo_or_axes, *, mode: str = "hier"):
     return topo.plan(mode).psum(x)
 
 
-def sparse_exchange(band, send_idx, recv_idx, topo_or_axes, rows_out: int):
-    """Footprint-compressed banded exchange (plan mode "sparse").
+def sparse_exchange(band, send_idx, recv_idx, topo_or_axes, rows_out: int,
+                    *, socket_map=None, socket_rows: int | None = None):
+    """Footprint-compressed banded exchange (plan modes "sparse" and
+    "hier-sparse"), executed as a view over the resolved ``CommPlan``.
 
     Each device's SpMM emits partials only for the virtual-row band its
     shard touches (an O(1/sqrt(P)) subset of global rows -- paper Fig.
     6-7).  Instead of densifying and reducing, ship exactly those entries
-    to their owners with one all-to-all over the static tables built by
-    ``core.partition.build_sparse_exchange``.
+    to their owners:
+
+      sparse        one flat all-to-all over the joint group, tables from
+                    ``core.partition.build_sparse_exchange``;
+      hier-sparse   two stages over the ladder, tables from
+                    ``core.partition.build_hier_sparse_exchange``:
+                    socket-level gather/dedup (scatter-add into the
+                    socket's merged band, reduce-scatter over the fast
+                    axis -- overlapping footprints are summed over the
+                    fast link instead of crossing the slow link once per
+                    member), then a sparse all-to-all across the slow
+                    (node/global) axes, then the local scatter-add.
 
     Args:
       band: [flat_rows, F] virtual-row partials of this device.
-      send_idx: [P, V] this device's rows (band slots) destined for each
-        peer; padding slots point at ``flat_rows``.
-      recv_idx: [P, V] owned-chunk row for each incoming slot, per peer;
-        padding points at ``rows_out`` (trash row).
+      send_idx: flat: [P, V] band slots destined for each peer (padding
+        points at ``flat_rows``); hier: [n_slow, V2] slots of this
+        device's merged-band group per slow peer (padding points at
+        ``socket_rows``).
+      recv_idx: flat: [P, V]; hier: [n_slow, V2].  Owned-chunk row for
+        each incoming slot; padding points at ``rows_out`` (trash row).
       topo_or_axes: Topology or axis names (fast -> slow) spanning the
         P = n_data exchange group.
       rows_out: rows of the owned output chunk.
+      socket_map: [flat_rows] merged-band slot per band slot (selects the
+        hier-sparse path; trash = fast_size * socket_rows).
+      socket_rows: W, rows per merged-band group (static; required with
+        ``socket_map``).
 
     Returns:
       [rows_out, F] owned chunk with all incoming partials scatter-added.
     """
     topo = _as_topology(topo_or_axes)
-    axes = topo.data_axes
-    # Pad with one zero row so padding send slots contribute nothing.
-    band_pad = jnp.concatenate(
-        [band, jnp.zeros((1, band.shape[1]), band.dtype)], axis=0
+    mode = "sparse" if socket_map is None else "hier-sparse"
+    plan = topo.plan(mode)
+    f = band.shape[1]
+
+    def scatter_out(got):
+        # Scatter-add into owned chunk (+ trash row for padding slots).
+        out = jnp.zeros((rows_out + 1, f), band.dtype)
+        out = out.at[recv_idx.reshape(-1)].add(
+            got.reshape(-1, f), mode="drop"
+        )
+        return out[:rows_out]
+
+    if mode == "sparse":
+        (step,) = plan.steps
+        # Pad with one zero row so padding send slots contribute nothing.
+        band_pad = jnp.concatenate(
+            [band, jnp.zeros((1, f), band.dtype)], axis=0
+        )
+        msgs = jnp.take(band_pad, send_idx, axis=0)  # [P, V, F]
+        # all_to_all: row p of msgs goes to peer p; we receive [P, V, F]
+        # where row p came from peer p.
+        got = jax.lax.all_to_all(
+            msgs, step.axes, split_axis=0, concat_axis=0, tiled=True
+        )
+        return scatter_out(got)
+
+    if socket_rows is None:
+        raise ValueError("hier-sparse exchange needs socket_rows (W)")
+    rs_step, a2a_step = plan.steps
+    g = topo.levels[0].size
+    # stage 1: merge the socket's partials into its deduplicated band
+    # (grouped by owner fast index) and leave each member its group,
+    # summed over the fast link.
+    merged = jnp.zeros((g * socket_rows + 1, f), band.dtype)
+    merged = merged.at[socket_map].add(band, mode="drop")[:-1]
+    mine = jax.lax.psum_scatter(
+        merged, rs_step.axes, scatter_dimension=0, tiled=True
+    )  # [socket_rows, F]
+    # stage 2: sparse all-to-all across the slow axes; every row of my
+    # group is owned by a device with my fast index, so it lands on its
+    # owner directly.
+    mine_pad = jnp.concatenate(
+        [mine, jnp.zeros((1, f), band.dtype)], axis=0
     )
-    msgs = jnp.take(band_pad, send_idx, axis=0)  # [P, V, F]
-    # all_to_all: row p of msgs goes to peer p; we receive [P, V, F] where
-    # row p came from peer p.
-    got = jax.lax.all_to_all(
-        msgs, axes, split_axis=0, concat_axis=0, tiled=True
-    )
-    # Scatter-add into owned chunk (+ trash row for padding slots).
-    out = jnp.zeros((rows_out + 1, band.shape[1]), band.dtype)
-    out = out.at[recv_idx.reshape(-1)].add(
-        got.reshape(-1, band.shape[1]), mode="drop"
-    )
-    return out[:rows_out]
+    msgs = jnp.take(mine_pad, send_idx, axis=0)  # [n_slow, V2, F]
+    if a2a_step.axes:
+        msgs = jax.lax.all_to_all(
+            msgs, a2a_step.axes, split_axis=0, concat_axis=0, tiled=True
+        )
+    return scatter_out(msgs)

@@ -26,6 +26,24 @@ Modes
   sparse   footprint-compressed all-to-all (beyond-paper): only rows that
            carry partial sums travel, using the static tables from
            ``core.partition.build_sparse_exchange``.
+  hier-sparse
+           the two paper tricks composed: partials are first merged
+           *within the socket level* (union of the members' footprints,
+           one deduplicated band per socket, reduce-scattered over the
+           fast link), and only the merged band crosses the slower links
+           in a sparse all-to-all.  Static tables come from
+           ``core.partition.build_hier_sparse_exchange``.
+
+Volume model (documented in docs/dist_api.md): for a dense per-device
+partial of ``M`` bytes over ``R`` padded rows, ladder sizes ``g_0`` (the
+socket) ... ``g_{L-1}``, flat-sparse pair capacity ``V``, merged socket
+band ``G*W`` rows and cross-socket capacity ``V2``:
+
+  direct / rs   level i carries M          (data reduced at every rung)
+  hier          level i carries M / prod_{j<i} g_j
+  sparse        level i carries M * P*V / R
+  hier-sparse   socket level carries M * G*W / R; every slower level
+                carries M * n_slow*V2 / R   (n_slow = P / G)
 """
 from __future__ import annotations
 
@@ -45,7 +63,7 @@ __all__ = [
     "LINK_CLASSES",
 ]
 
-MODES = ("direct", "rs", "hier", "sparse")
+MODES = ("direct", "rs", "hier", "sparse", "hier-sparse")
 
 # Canonical link class per production mesh axis: the minor ICI axis is
 # the paper's "socket", the major ICI axis its "node", DCI its "global"
@@ -140,16 +158,25 @@ class Topology:
         return math.prod(self.mesh.shape[a] for a in self.batch_axes)
 
     def plan(self, mode: str, *, pair_slots: int | None = None,
-             dense_rows: int | None = None) -> "CommPlan":
+             dense_rows: int | None = None,
+             merged_rows: int | None = None,
+             cross_rows: int | None = None) -> "CommPlan":
         """Resolve ``mode`` into a :class:`CommPlan`.
 
-        ``sparse`` additionally needs the exchange-table pair capacity
-        ``pair_slots`` (V of ``build_sparse_exchange``) and ``dense_rows``
-        (padded global rows) to model wire volume; runtime execution works
-        without them.
+        The sparse modes additionally need static table capacities to
+        model wire volume (runtime execution works without them):
+        ``sparse`` takes ``pair_slots`` (V of ``build_sparse_exchange``)
+        and ``dense_rows`` (padded global rows); ``hier-sparse`` takes
+        ``merged_rows`` (G*W, the padded per-socket merged band of
+        ``build_hier_sparse_exchange``) and ``cross_rows`` (n_slow*V2,
+        per-device rows crossing the slow links) plus ``dense_rows``.
+        ``core.partition.exchange_volume_params`` computes all four from
+        an operator shard (exact tables when built, estimates for
+        abstract plans).
         """
         return CommPlan.resolve(
-            self, mode, pair_slots=pair_slots, dense_rows=dense_rows
+            self, mode, pair_slots=pair_slots, dense_rows=dense_rows,
+            merged_rows=merged_rows, cross_rows=cross_rows,
         )
 
     def describe(self) -> str:
@@ -225,7 +252,9 @@ class CommPlan:
     @classmethod
     def resolve(cls, topo: Topology, mode: str, *,
                 pair_slots: int | None = None,
-                dense_rows: int | None = None) -> "CommPlan":
+                dense_rows: int | None = None,
+                merged_rows: int | None = None,
+                cross_rows: int | None = None) -> "CommPlan":
         if mode not in MODES:
             raise ValueError(f"unknown comm mode {mode!r}; one of {MODES}")
         levels = topo.levels
@@ -247,13 +276,32 @@ class CommPlan:
                 fracs.append(frac)
                 frac /= lv.size
             steps, fracs = tuple(steps), tuple(fracs)
-        else:  # sparse
+        elif mode == "sparse":
             if pair_slots is not None and dense_rows:
                 frac = topo.n_data * pair_slots / float(dense_rows)
             else:
                 frac = float("nan")  # volume model needs the tables
             steps = (CommStep("all_to_all", axes, slowest, frac),)
             fracs = tuple(frac for _ in levels)
+        else:  # hier-sparse: socket-level dedup, then cross-socket a2a
+            if not levels:
+                raise ValueError("hier-sparse needs at least one level")
+            sock = levels[0]
+            if merged_rows is not None and dense_rows:
+                sock_frac = merged_rows / float(dense_rows)
+            else:
+                sock_frac = float("nan")
+            if cross_rows is not None and dense_rows:
+                cross_frac = cross_rows / float(dense_rows)
+            else:
+                cross_frac = float("nan")
+            steps = (
+                CommStep(
+                    "reduce_scatter", (sock.axis,), sock.link, sock_frac
+                ),
+                CommStep("all_to_all", axes[1:], slowest, cross_frac),
+            )
+            fracs = (sock_frac,) + tuple(cross_frac for _ in levels[1:])
         return cls(
             topology=topo, mode=mode, steps=steps, level_fracs=fracs
         )
@@ -299,10 +347,11 @@ class CommPlan:
         linearization (first axis major), matching the partition plan's
         device order under a ``PartitionSpec((data_axes,))`` sharding.
         """
-        if self.mode == "sparse":
+        if self.mode in ("sparse", "hier-sparse"):
             raise ValueError(
-                "sparse mode reduces via dist.collectives.sparse_exchange"
-                " (needs the static footprint tables)"
+                f"{self.mode} mode reduces via "
+                "dist.collectives.sparse_exchange (needs the static "
+                "footprint tables)"
             )
         axes = self.topology.data_axes
         p = self.topology.n_data
@@ -341,8 +390,8 @@ class CommPlan:
             return x
         if self.mode == "direct" or len(axes) == 1:
             return jax.lax.psum(x, axes)
-        if self.mode == "sparse":
-            raise ValueError("sparse mode has no psum form")
+        if self.mode in ("sparse", "hier-sparse"):
+            raise ValueError(f"{self.mode} mode has no psum form")
         if not _scatter_collectives_ok():
             for lv in self.topology.levels:
                 x = jax.lax.psum(x, lv.axis)

@@ -10,6 +10,35 @@ Usage:
   python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
   python -m repro.launch.dryrun --xct xct-brain [--multi-pod]
+
+The XCT cells pair the compiled-HLO numbers with ``xct_analytic``, a
+slot-exact cost model over the static blocked-ELL shapes.  Its wire
+volumes are not hand-rolled here: they flow from ``dist.CommPlan``'s
+per-link-class model, resolved against the cell's ``dist.Topology`` (so
+the dry-run, the §Perf sweep and ``benchmarks/bench_comms.py`` can never
+disagree about what a mode ships over ICI vs DCI).
+
+Example -- the analytic model is pure accounting, usable without any
+devices attached (a meshless two-level ladder, one CG iteration):
+
+>>> from repro.core.geometry import XCTGeometry
+>>> from repro.core.partition import PartitionConfig, estimate_plan
+>>> from repro.core.recon import ReconConfig
+>>> from repro.dist import Topology
+>>> plan = estimate_plan(
+...     XCTGeometry(n=512, n_angles=256),
+...     PartitionConfig(n_data=16, tile=32, rows_per_block=64,
+...                     nnz_per_stage=64),
+... )
+>>> topo = Topology.from_sizes([("model", 8, "ici"), ("data", 2, "dci")])
+>>> an = xct_analytic(
+...     plan, ReconConfig(precision="mixed", comm_mode="hier"), topo,
+...     fuse=4, iters=1,
+... )
+>>> sorted(an) == ['dci_dev', 'flops_dev', 'hbm_dev', 'ici_dev']
+True
+>>> an["dci_dev"] == an["ici_dev"] / 8  # ladder: 1/|socket| crosses DCI
+True
 """
 # The two lines below MUST precede any jax import: jax locks the device
 # count on first init, and only the dry-run wants 512 placeholder devices.
@@ -340,7 +369,7 @@ def lower_xct_cell(dataset: str, multi_pod: bool, iters: int = 2) -> dict:
     coll = analyze_collectives(
         compiled.as_text(), pod_size=256 if multi_pod else 0
     )
-    an = xct_analytic(plan, rcfg, p_data, y_slices // n_batch, iters)
+    an = xct_analytic(plan, rcfg, topo, y_slices // n_batch, iters)
     # useful flops: 2 flops/nnz * 2 ops (proj+back) * fuse slices * iters
     nnz_total = geo.n_rays * 1.195 * ds.n
     useful = 4.0 * nnz_total * (y_slices // n_batch) * iters / p_data
@@ -371,15 +400,18 @@ def lower_xct_cell(dataset: str, multi_pod: bool, iters: int = 2) -> dict:
     }
 
 
-def xct_analytic(plan, rcfg, p_data: int, fuse: int, iters: int) -> dict:
+def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
     """Slot-exact per-device cost model for the XCT CG step.
 
     The minibatch pipeline and CG loop are lax.scans (counted once by
     cost_analysis), so FLOPs/bytes are computed from the static blocked-ELL
     shapes instead: 2 FLOPs per nnz slot per fused slice, 4 B/slot operator
-    reads (paper packing), window staging traffic, and the dense or sparse
-    (footprint-compressed) exchange volume per reduction.
+    reads (paper packing), and window staging traffic.  The exchange
+    volume per reduction is whatever ``topo.plan(rcfg.comm_mode)`` models
+    for each link class -- one source of truth shared with the runtime
+    collectives and ``benchmarks/bench_comms.py``.
     """
+    from ..core.partition import exchange_volume_params
     from ..core.precision import get_policy
 
     pol = get_policy(rcfg.precision)
@@ -397,14 +429,14 @@ def xct_analytic(plan, rcfg, p_data: int, fuse: int, iters: int) -> dict:
             + float(b) * s * buf * (4 + 2 * sb * fuse)
             + float(b) * r * fuse * 4 * 2
         )
-        if rcfg.comm_mode == "sparse":
-            v = getattr(op, "est_v", None) or 8
-            wire = float(p_data) * v * fuse * cb
-        else:
-            wire = float(op.n_rows_pad) * fuse * cb
-        out["ici_dev"] += iters * wire
-        # hier mode: inter-pod stage carries 1/|fast| of the volume
-        out["dci_dev"] += iters * wire / 256.0
+        dense = float(op.n_rows_pad) * fuse * cb
+        params = (
+            exchange_volume_params(op, topo)
+            if rcfg.comm_mode in ("sparse", "hier-sparse") else {}
+        )
+        wl = topo.plan(rcfg.comm_mode, **params).wire_bytes_by_link(dense)
+        out["ici_dev"] += iters * wl.get("ici", 0.0)
+        out["dci_dev"] += iters * wl.get("dci", 0.0)
     return out
 
 

@@ -14,6 +14,7 @@ from ..core.geometry import XCTGeometry, build_system_matrix
 from ..core.partition import PartitionConfig, build_plan
 from ..core.recon import ReconConfig, Reconstructor
 from ..data.phantom import phantom_slices, simulate_measurements
+from ..dist import MODES
 
 
 def main(argv=None):
@@ -25,8 +26,7 @@ def main(argv=None):
     ap.add_argument("--p-data", type=int, default=1)
     ap.add_argument("--fuse", type=int, default=4)
     ap.add_argument("--precision", default="mixed")
-    ap.add_argument("--comm", default="hier",
-                    choices=("direct", "rs", "hier", "sparse"))
+    ap.add_argument("--comm", default="hier", choices=MODES)
     ap.add_argument("--noise", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

@@ -1,0 +1,181 @@
+"""CommPlan wire-volume model: launch-layer parity + sparse dedup.
+
+Everything the launch layer reports about communication volume must be a
+view over ``dist.CommPlan`` -- these tests pin the two unification
+points:
+
+  * ``launch.xct_perf.comm_volume`` returns exactly what the resolved
+    plans model, per link class, for every mode (regression for the old
+    hand-rolled ``direct`` branch that double-counted DCI with a 2x
+    all-reduce factor on top of the pod fan-out);
+  * the hierarchical sparse exchange's socket-level dedup strictly
+    reduces modeled DCI bytes vs the flat ``sparse`` all-to-all, both on
+    a real small plan (exact tables) and at xct-brain scale (analytic
+    estimates).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.xct_datasets import DATASETS
+from repro.core.geometry import XCTGeometry, build_system_matrix
+from repro.core.partition import (
+    PartitionConfig,
+    build_hier_sparse_exchange,
+    build_plan,
+    build_sparse_exchange,
+    estimate_plan,
+    exchange_volume_params,
+)
+from repro.dist import MODES, Topology
+from repro.launch.xct_perf import comm_volume, sweep_topology
+
+
+@pytest.fixture(scope="module")
+def small_plan():
+    geo = XCTGeometry(n=32, n_angles=24)
+    a = build_system_matrix(geo)
+    return build_plan(
+        geo,
+        PartitionConfig(n_data=4, tile=4, rows_per_block=16,
+                        nnz_per_stage=16),
+        a=a,
+    )
+
+
+def test_comm_volume_matches_commplan_all_modes(small_plan):
+    """comm_volume is a pure view over CommPlan -- per-link parity."""
+    topo = Topology.from_sizes(
+        [("model", 2, "ici"), ("data", 2, "dci")]
+    )
+    fuse, cb = 4, 2
+    for mode in MODES:
+        got = comm_volume(small_plan, mode, fuse, cb, topo)
+        want = {"ici": 0.0, "dci": 0.0}
+        for op in (small_plan.proj, small_plan.back):
+            dense = float(op.n_rows_pad) * fuse * cb
+            cp = topo.plan(mode, **exchange_volume_params(op, topo))
+            for link, b in cp.wire_bytes_by_link(dense).items():
+                want[link] += b
+        assert got == pytest.approx(want), mode
+
+
+def test_direct_dci_not_double_counted(small_plan):
+    """Regression: the old hand-rolled ``direct`` branch charged DCI a
+    2x all-reduce factor on top of the pod fan-out.  In the paper's
+    reduce-semantics accounting (Table IV) the flat all-reduce reduces
+    the full dense partial at the global rung: DCI bytes == the dense
+    partial, once, same as ``rs``."""
+    topo = Topology.from_sizes(
+        [("model", 2, "ici"), ("data", 2, "dci")]
+    )
+    fuse, cb = 4, 2
+    dense_total = sum(
+        float(op.n_rows_pad) * fuse * cb
+        for op in (small_plan.proj, small_plan.back)
+    )
+    direct = comm_volume(small_plan, "direct", fuse, cb, topo)
+    assert direct["dci"] == pytest.approx(dense_total)
+    assert direct == pytest.approx(
+        comm_volume(small_plan, "rs", fuse, cb, topo)
+    )
+
+
+def test_socket_dedup_strictly_reduces_dci_exact(small_plan):
+    """Exact tables: hier-sparse DCI < flat sparse DCI, because the
+    socket members' overlapping footprints are merged before crossing
+    the slow link (and the merged band is strictly smaller than the sum
+    of the members' bands)."""
+    topo = Topology.from_sizes(
+        [("model", 2, "ici"), ("data", 2, "dci")]
+    )
+    for op in (small_plan.proj, small_plan.back):
+        params = exchange_volume_params(op, topo)
+        dense = float(op.n_rows_pad)
+        flat = topo.plan("sparse", **params).wire_bytes_by_link(dense)
+        hs = topo.plan("hier-sparse", **params).wire_bytes_by_link(dense)
+        assert hs["dci"] < flat["dci"]
+        # ... and the model mirrors the real table capacities
+        _, _, v = build_sparse_exchange(op)
+        _, _, _, w, v2 = build_hier_sparse_exchange(op, 2)
+        assert params["pair_slots"] == v
+        assert params["merged_rows"] == 2 * w
+        assert params["cross_rows"] == 2 * v2
+        # dedup in rows, not just padding: the merged band is smaller
+        # than the stacked member bands
+        foot_sum = sum(r.size for r in op.foot_rows)
+        assert params["merged_rows"] <= foot_sum
+
+
+def test_socket_dedup_reduces_dci_at_brain_scale():
+    """Acceptance: modeled DCI bytes of hier-sparse at xct-brain scale
+    (P_d = 512 over two pods) are strictly below flat sparse."""
+    ds = DATASETS["xct-brain"]
+    geo = XCTGeometry(n=ds.n, n_angles=ds.k)
+    plan = estimate_plan(
+        geo,
+        PartitionConfig(n_data=512, tile=32, rows_per_block=64,
+                        nnz_per_stage=64),
+    )
+    topo = sweep_topology(512)
+    assert [lv.link for lv in topo.levels] == ["ici", "ici", "dci"]
+    flat = comm_volume(plan, "sparse", 16, 2, topo)
+    hs = comm_volume(plan, "hier-sparse", 16, 2, topo)
+    direct = comm_volume(plan, "direct", 16, 2, topo)
+    assert hs["dci"] < flat["dci"]
+    assert hs["dci"] < direct["dci"]
+
+
+def test_hier_sparse_level_fracs_shape():
+    """Per-link accounting of the new mode: the socket rung carries the
+    merged band, every slower rung the cross-socket slots."""
+    topo = Topology.from_sizes(
+        [("model", 4, "ici"), ("data", 4, "ici"), ("pod", 2, "dci")]
+    )
+    cp = topo.plan(
+        "hier-sparse", dense_rows=1000, merged_rows=400, cross_rows=80
+    )
+    assert cp.level_fracs == pytest.approx((0.4, 0.08, 0.08))
+    assert [s.op for s in cp.steps] == ["reduce_scatter", "all_to_all"]
+    assert cp.steps[0].axes == ("model",)
+    assert cp.steps[1].axes == ("data", "pod")
+    by_link = cp.wire_bytes_by_link(1000.0)
+    assert by_link["ici"] == pytest.approx(400.0 + 80.0)
+    assert by_link["dci"] == pytest.approx(80.0)
+    # without the table capacities the volume model is NaN, never wrong
+    assert math.isnan(topo.plan("hier-sparse").level_fracs[0])
+
+
+def test_hier_sparse_tables_route_every_partial(small_plan):
+    """Host-side replay of the three stages: scatter into the merged
+    band, fast-axis reduce-scatter, slow-axis all-to-all, owner
+    scatter-add -- must equal the dense reduction exactly."""
+    G, n_slow = 2, 2
+    for op in (small_plan.proj, small_plan.back):
+        smap, send2, recv2, w, v2 = build_hier_sparse_exchange(op, G)
+        P, rpd = 4, op.rows_per_dev
+        rng = np.random.default_rng(0)
+        bands = rng.standard_normal((P, op.flat_rows))
+        dense = np.zeros(op.n_rows_pad)
+        for p in range(P):
+            rm = op.row_map[p].reshape(-1)
+            valid = rm < op.n_rows_pad
+            bands[p][~valid] = 0.0
+            np.add.at(dense, rm[valid], bands[p][valid])
+        out = np.zeros((P, rpd))
+        for t in range(n_slow):
+            merged = np.zeros(G * w + 1)
+            for f in range(G):
+                np.add.at(merged, smap[f * n_slow + t],
+                          bands[f * n_slow + t])
+            merged = merged[:-1]
+            for f in range(G):
+                src = f * n_slow + t
+                mine = np.append(merged[f * w:(f + 1) * w], 0.0)
+                for t2 in range(n_slow):
+                    q = f * n_slow + t2
+                    tgt = np.zeros(rpd + 1)
+                    np.add.at(tgt, recv2[q, t], mine[send2[src, t2]])
+                    out[q] += tgt[:rpd]
+        np.testing.assert_allclose(out.reshape(-1), dense, atol=1e-12)

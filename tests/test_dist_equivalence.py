@@ -7,9 +7,10 @@ Two layers of assurance, per the dist API contract:
     ``hierarchical_psum`` agree with a dense ``psum`` reference, in fp32
     exactly and through an fp16 wire cast to wire tolerance;
   * system level: ``Reconstructor.project`` / ``backproject`` match the
-    scipy operator under **all four** modes (sparse included -- its
-    footprint tables have no raw-ladder form) on the oracle kernel path
-    (``kernels/ref.py``), and the four modes agree with each other.
+    scipy operator under **all five** modes (sparse and hier-sparse
+    included -- their footprint tables have no raw-ladder form) on the
+    oracle kernel path (``kernels/ref.py``), and the five modes agree
+    with each other.
 """
 import os
 import subprocess
@@ -80,7 +81,7 @@ print("OK ladders")
 
 
 def test_recon_modes_match_ref_oracle():
-    """All four comm modes reproduce the scipy operator through the
+    """All five comm modes reproduce the scipy operator through the
     oracle (kernels/ref.py) apply path, and agree with each other under
     the fp16-wire mixed policy."""
     _run("""
@@ -104,7 +105,7 @@ y = (A @ x).astype(np.float32)
 ref_p, ref_b = A @ x, A.T @ y
 
 mixed = {}
-for mode in ("direct", "rs", "hier", "sparse"):
+for mode in ("direct", "rs", "hier", "sparse", "hier-sparse"):
     rec = Reconstructor(plan, topology=topo,
         cfg=ReconConfig(precision="single", comm_mode=mode, fuse=2,
                         use_ref=True))
@@ -123,8 +124,53 @@ for mode in ("direct", "rs", "hier", "sparse"):
     assert rel < 5e-3, ("mixed project", mode, rel)
 
 base = mixed["direct"]
-for mode in ("rs", "hier", "sparse"):
+for mode in ("rs", "hier", "sparse", "hier-sparse"):
     rel = np.abs(mixed[mode] - base).max() / np.abs(base).max()
     assert rel < 5e-3, ("cross-mode", mode, rel)
 print("OK recon modes")
+""")
+
+
+def test_hier_sparse_matches_dense_psum_fp32():
+    """The hierarchical sparse exchange is bit-equivalent (fp32) to the
+    dense-psum reduction through the Reconstructor apply path, and
+    tolerance-equivalent through the fp16 wire (mixed policy)."""
+    _run("""
+import numpy as np, jax
+from repro.core.geometry import XCTGeometry, build_system_matrix
+from repro.core.partition import PartitionConfig, build_plan
+from repro.core.recon import Reconstructor, ReconConfig
+from repro.dist import Topology
+
+geo = XCTGeometry(n=32, n_angles=48)
+A = build_system_matrix(geo)
+plan = build_plan(geo, PartitionConfig(n_data=4, tile=4,
+                  rows_per_block=16, nnz_per_stage=16), a=A)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+topo = Topology.from_mesh(mesh, data_axes=("model", "data"),
+                          batch_axes=())
+rng = np.random.default_rng(7)
+x = rng.random((geo.n_vox, 4)).astype(np.float32)
+y = (A @ x).astype(np.float32)
+
+def outs(mode, prec):
+    rec = Reconstructor(plan, topology=topo,
+        cfg=ReconConfig(precision=prec, comm_mode=mode, fuse=2,
+                        use_ref=True))
+    return rec.project(x), rec.backproject(y)
+
+# fp32 wire: direct is a dense psum + slice; the two-stage exchange
+# reorders only the *summation* of identical fp32 partials along the
+# same row -- demand near-bit agreement
+for (ph, bh), (pd, bd) in [(outs("hier-sparse", "single"),
+                            outs("direct", "single"))]:
+    for got, ref in ((ph, pd), (bh, bd)):
+        rel = np.abs(got - ref).max() / np.abs(ref).max()
+        assert rel < 2e-6, ("fp32", rel)
+# fp16 wire: tolerance equivalence
+(ph, bh), (pd, bd) = outs("hier-sparse", "mixed"), outs("direct", "mixed")
+for got, ref in ((ph, pd), (bh, bd)):
+    rel = np.abs(got - ref).max() / np.abs(ref).max()
+    assert rel < 5e-3, ("fp16 wire", rel)
+print("OK hier-sparse vs dense psum")
 """)

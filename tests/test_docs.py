@@ -1,0 +1,22 @@
+"""Docs stay true: doc examples execute, intra-repo links resolve.
+
+Runs ``tools/check_docs.py`` in a subprocess because importing
+``repro.launch.dryrun`` (one of the doctest'd modules) sets XLA_FLAGS
+for 512 placeholder devices, which must not leak into this process's
+jax.
+"""
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_doc_examples_and_links():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "tools", "check_docs.py")],
+        capture_output=True, text=True, env=env, timeout=600, cwd=_ROOT,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"

@@ -41,7 +41,7 @@ sino = (A @ x_true).astype(np.float32)
 
 
 @pytest.mark.parametrize(
-    "mode", ["direct", "rs", "hier", "sparse"]
+    "mode", ["direct", "rs", "hier", "sparse", "hier-sparse"]
 )
 def test_comm_modes_match_scipy(mode):
     _run(

@@ -2,7 +2,7 @@
 
   1. The reconstruction pipeline recovers a phantom from its simulated
      measurements across precision ladders (Table III / Fig. 13 shape).
-  2. All four communication strategies agree (Sec. III-D is a schedule
+  2. All five communication strategies agree (Sec. III-D is a schedule
      optimization, not a math change).
   3. Training the ~100M-class example arch reduces loss (deliverable b).
   4. Drivers are importable and runnable end-to-end on CPU.
@@ -36,14 +36,14 @@ def test_comm_modes_equivalent(small_system, phantom32):
     _, _, plan = small_system
     x_true, y = phantom32
     outs = {}
-    for mode in ("direct", "rs", "hier", "sparse"):
+    for mode in ("direct", "rs", "hier", "sparse", "hier-sparse"):
         rec = Reconstructor(
             plan,
             cfg=ReconConfig(precision="single", comm_mode=mode, fuse=2),
         )
         x, _ = rec.reconstruct(y, iters=8)
         outs[mode] = x
-    for mode in ("rs", "hier", "sparse"):
+    for mode in ("rs", "hier", "sparse", "hier-sparse"):
         np.testing.assert_allclose(
             outs["direct"], outs[mode], rtol=1e-4, atol=1e-5
         )

@@ -1,0 +1,84 @@
+"""Docs checker: doctest every doc example + verify intra-repo links.
+
+Run from the repo root (CI's docs job does):
+
+  PYTHONPATH=src python tools/check_docs.py
+
+Three passes:
+  1. ``python -m doctest`` over every ``docs/*.md`` and ``README.md``
+     (one subprocess, so a crash in an example cannot take the link
+     check down with it);
+  2. ``doctest.testmod`` over the modules that carry doc examples
+     (``python -m doctest path.py`` cannot import package-relative
+     modules, so they are imported properly here);
+  3. every relative markdown link in those files must resolve to a file
+     in the repo (http(s) links and pure #anchors are skipped; a
+     ``#fragment`` on an existing file is accepted).
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+# dryrun first: it must set XLA_FLAGS (512 placeholder devices) before
+# anything else in this process initializes jax
+DOCTEST_MODULES = [
+    "repro.launch.dryrun",
+    "repro.launch.xct_perf",
+]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_doctests() -> int:
+    failed = 0
+    md = [str(f.relative_to(ROOT)) for f in DOC_FILES]
+    r = subprocess.run(
+        [sys.executable, "-m", "doctest"] + md, cwd=ROOT,
+    )
+    print(f"python -m doctest {' '.join(md)}: "
+          f"{'ok' if r.returncode == 0 else 'FAILED'}")
+    failed += r.returncode != 0
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        r = doctest.testmod(mod)
+        print(f"doctest {name}: {r.attempted - r.failed}/{r.attempted} ok")
+        failed += r.failed
+    return failed
+
+
+def check_links() -> int:
+    broken = 0
+    for f in DOC_FILES:
+        for target in _LINK_RE.findall(f.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure in-page anchor
+                continue
+            resolved = (f.parent / path).resolve()
+            if not resolved.exists():
+                print(f"BROKEN LINK in {f.relative_to(ROOT)}: {target}")
+                broken += 1
+    return broken
+
+
+def main() -> int:
+    failed = check_doctests()
+    broken = check_links()
+    if failed or broken:
+        print(f"FAILED: {failed} doctest failures, {broken} broken links")
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
