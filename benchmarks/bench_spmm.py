@@ -1,11 +1,16 @@
 """Paper Fig. 9: XCT-optimized SpMM speedup + roofline vs fusing factor.
 
 Sweeps the minibatch (slice-fusing) size F across precision policies on a
-real blocked-ELL shard.  CPU wall time measures the *relative* effect of
-fusing (operator elements amortized over F slices -- the paper's register
-reuse); the derived column reports arithmetic intensity and the projected
-TPU-roofline GFLOP/s per chip (min of compute and memory-bound bounds),
-which is the Fig. 9(b) quantity.
+real blocked-ELL shard, for both staging paths: ``fused`` (the kernel
+streams each stage's window HBM -> VMEM itself, paper Listing 1) and the
+legacy ``gather`` baseline (XLA gather materializes the window tensor in
+HBM first -- one extra full pass over the staged data).  CPU wall time
+measures the *relative* effect of fusing (operator elements amortized
+over F slices -- the paper's register reuse); the derived column reports
+arithmetic intensity and the projected TPU-roofline GFLOP/s per chip
+(min of compute and memory-bound bounds), both straight from the shared
+traffic model ``repro.kernels.traffic.spmm_traffic`` -- the fused rows
+show the staging HBM term eliminated (strictly higher AI at every F).
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import numpy as np
 from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import PartitionConfig, build_plan
 from repro.kernels.ops import apply_operator
+from repro.kernels.traffic import spmm_traffic
 
 from .common import emit, timeit
 
@@ -39,6 +45,8 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False):
     _, b, s, r, k = op.inds.shape
     buf = op.winmap.shape[-1]
     rng = np.random.default_rng(0)
+    if quick:
+        fusings = tuple(fusings)[:3]
     base_t = None
     policies = (
         [("single", jnp.float32), ("mixed", jnp.float16)]
@@ -56,29 +64,32 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False):
             x = jnp.asarray(
                 rng.normal(size=(op.cols_per_dev, f)).astype(np.float32)
             )
-            fn = jax.jit(
-                lambda xx, i=inds, v=vals, w=winmap, sd=sdt, cd=cdt:
-                apply_operator(i, v, w, xx, storage_dtype=sd,
-                               compute_dtype=cd)
-            )
-            t = timeit(fn, x, reps=3 if not quick else 1)
-            slots = float(b * s * r * k)
-            flops = 2.0 * slots * f
-            if base_t is None:
-                base_t = t / flops  # seconds per flop at F=1 baseline
-            sb = jnp.dtype(sdt).itemsize
-            bytes_moved = slots * (2 + sb) + b * s * buf * (
-                4 + sb * f * 2
-            ) + b * r * f * 8
-            ai = flops / bytes_moved
-            tpu_gflops = min(PEAK, ai * HBM) / 1e9
-            emit(
-                f"spmm_fusing/{prec}/F={f}",
-                t * 1e6,
-                # throughput speedup per unit work (paper Fig. 9a metric)
-                f"speedup={base_t/(t/flops):.2f}x ai={ai:.2f}flop/B "
-                f"roofline={tpu_gflops:.0f}GF/s",
-            )
+            for staging in ("fused", "gather"):
+                fn = jax.jit(
+                    lambda xx, i=inds, v=vals, w=winmap, sd=sdt,
+                    cd=cdt, st=staging:
+                    apply_operator(i, v, w, xx, storage_dtype=sd,
+                                   compute_dtype=cd, staging=st)
+                )
+                t = timeit(fn, x, reps=3 if not quick else 1)
+                tr = spmm_traffic(
+                    b, s, r, k, buf, f,
+                    storage_bytes=jnp.dtype(sdt).itemsize,
+                    staging=staging,
+                )
+                flops = tr["flops"]
+                if base_t is None:
+                    base_t = t / flops  # s/flop at the F=1 baseline
+                ai = tr["intensity"]
+                tpu_gflops = min(PEAK, ai * HBM) / 1e9
+                emit(
+                    f"spmm_fusing/{prec}/{staging}/F={f}",
+                    t * 1e6,
+                    # throughput speedup per unit work (Fig. 9a metric)
+                    f"speedup={base_t / (t / flops):.2f}x "
+                    f"ai={ai:.2f}flop/B "
+                    f"roofline={tpu_gflops:.0f}GF/s",
+                )
 
 
 if __name__ == "__main__":

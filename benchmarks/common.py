@@ -1,9 +1,23 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+``emit`` prints the human-readable CSV row *and* accumulates a
+machine-readable record per suite (the leading ``name`` path component),
+flushed to ``BENCH_<suite>.json`` in the working directory after every
+row -- so a partially failed run still leaves the rows it measured.
+``k=v`` tokens in the derived string are parsed into typed fields, which
+is what lets CI track the perf trajectory across commits.
+"""
 from __future__ import annotations
 
+import json
+import re
 import time
 
 import numpy as np
+
+_RECORDS: dict[str, list] = {}
+
+_NUM_RE = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?")
 
 
 def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
@@ -20,5 +34,36 @@ def timeit(fn, *args, warmup: int = 1, reps: int = 3) -> float:
     return float(np.median(ts))
 
 
+def _parse_derived(derived: str) -> dict:
+    """``"speedup=1.61x ai=0.23flop/B"`` -> numeric fields (unit tails
+    stripped); non-numeric values kept as strings."""
+    out = {}
+    for tok in derived.split():
+        if "=" not in tok:
+            continue
+        key, val = tok.split("=", 1)
+        m = _NUM_RE.match(val)
+        out[key] = float(m.group(0)) if m else val
+    return out
+
+
+def reset(suite: str | None = None):
+    """Drop accumulated rows (one suite, or all).  Call before re-running
+    a bench in the same process, or BENCH_<suite>.json grows duplicate
+    rows; ``benchmarks.run.main`` does this once per invocation."""
+    if suite is None:
+        _RECORDS.clear()
+    else:
+        _RECORDS.pop(suite, None)
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    suite = name.split("/", 1)[0]
+    rec = {"name": name, "us_per_call": round(float(us_per_call), 3),
+           "derived": derived}
+    rec.update(_parse_derived(derived))
+    rows = _RECORDS.setdefault(suite, [])
+    rows.append(rec)
+    with open(f"BENCH_{suite}.json", "w") as f:
+        json.dump(rows, f, indent=1)

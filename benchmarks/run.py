@@ -28,8 +28,10 @@ def main(argv=None) -> None:
 
     from . import (
         bench_comms, bench_convergence, bench_recon, bench_scaling,
-        bench_spmm,
+        bench_spmm, common,
     )
+
+    common.reset()  # fresh BENCH_<suite>.json rows for this invocation
 
     benches = {
         "spmm": bench_spmm.run,

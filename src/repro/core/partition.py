@@ -43,6 +43,7 @@ __all__ = [
     "build_hier_sparse_exchange",
     "estimate_hier_sparse",
     "exchange_volume_params",
+    "socket_chunk_layout",
 ]
 
 
@@ -56,6 +57,14 @@ class PartitionConfig:
     nnz_per_stage: int = 32  # K: nnz slots per row per stage
     index_dtype: type = np.int16  # window index (2 bytes, paper packing)
     value_dtype: type = np.float16  # stored lengths (2 bytes, paper packing)
+    # Hilbert-aware socket assignment: with ``socket=G > 1``, device slot
+    # ``p = f * n_slow + t`` (fast-axis-major, the runtime linearization)
+    # owns Hilbert chunk ``t * G + f`` instead of chunk ``p`` -- every
+    # socket holds G *consecutive* Hilbert chunks, so its members' band
+    # footprints overlap and ``build_hier_sparse_exchange``'s merged-band
+    # dedup actually bites.  Must equal the topology's fast-level size
+    # (or 1 for the legacy identity layout).
+    socket: int = 1
 
 
 @dataclasses.dataclass
@@ -79,6 +88,10 @@ class OperatorShards:
                                   cast to the precision policy's storage
                                   dtype at apply time)
       winmap     [P, B, S, BUF]   device-local input column ids to stage
+                                  (int32: BUF-padded, scalar-prefetched to
+                                  SMEM by the fused kernel, which DMAs the
+                                  named rows HBM -> VMEM itself -- no
+                                  staged window tensor exists in HBM)
       row_map    [P, B, R]        global (padded) output row of each
                                   virtual row; padding points at
                                   ``n_rows_pad`` (dropped by the scatter);
@@ -109,15 +122,30 @@ class OperatorShards:
         return int(np.prod(self.inds.shape))
 
     def hbm_bytes(self, value_bytes: int = 2, index_bytes: int = 2) -> int:
-        """HBM footprint of the operator in the paper's packed layout."""
+        """Resident HBM footprint of the operator (paper packed layout).
+
+        Counts only what actually lives in HBM under in-kernel staging:
+        the packed nnz slots plus the int32 ``winmap``/``row_map``
+        metadata.  The staged ``[B, S, BUF, F]`` window tensor of the
+        legacy gather path is a *transient*, not part of the operator --
+        and the fused kernel never allocates it at all (its staging is
+        the O(VMEM) double buffer, see ``kernels.xct_spmm.vmem_bytes``).
+        """
         return self.padded_nnz * (value_bytes + index_bytes) + (
-            self.winmap.size * 4 + self.block_rows.size * 4
+            self.winmap.size * 4 + self.row_map.size * 4
         )
 
 
 @dataclasses.dataclass
 class Plan:
-    """Full per-volume partition plan (both operators + orderings)."""
+    """Full per-volume partition plan (both operators + orderings).
+
+    ``row_pos`` / ``col_pos`` map a padded *Hilbert* index to its
+    *stored* (device-major) index when the socket-aware chunk layout is
+    active (``cfg.socket > 1``): stored block ``p`` holds Hilbert chunk
+    ``socket_chunk_layout(P, socket)[p]``.  ``None`` means identity
+    (chunk ``p`` on device slot ``p``).
+    """
 
     geo: XCTGeometry
     cfg: PartitionConfig
@@ -125,6 +153,8 @@ class Plan:
     col_perm: np.ndarray  # curve position -> flat voxel
     proj: OperatorShards  # rows = sinogram, cols = tomogram
     back: OperatorShards  # rows = tomogram, cols = sinogram
+    row_pos: np.ndarray | None = None  # Hilbert idx -> stored idx (sino)
+    col_pos: np.ndarray | None = None  # Hilbert idx -> stored idx (tomo)
 
     @property
     def n_data(self) -> int:
@@ -133,6 +163,39 @@ class Plan:
 
 def _pad_to(x: int, m: int) -> int:
     return m * int(math.ceil(x / m))
+
+
+def socket_chunk_layout(p_data: int, socket: int) -> np.ndarray:
+    """``sigma[p]`` = Hilbert chunk owned by device slot ``p``.
+
+    The runtime linearizes device slots fast-axis-major
+    (``p = f * n_slow + t``, as ``jax.lax.axis_index(data_axes)`` does
+    with the fast axis first), so under the identity layout socket ``t``
+    owns chunks ``{t, n_slow + t, ...}`` -- *scattered* along the
+    Hilbert curve, leaving the hier-sparse socket dedup little overlap
+    (ROADMAP: "consecutive chunks currently land in different sockets").
+    With ``sigma[f * n_slow + t] = t * G + f`` every socket owns ``G``
+    consecutive chunks: adjacent subdomains whose band footprints shadow
+    each other (paper Fig. 6-7).
+    """
+    if socket <= 1:
+        return np.arange(p_data)
+    if p_data % socket:
+        raise ValueError(
+            f"socket {socket} does not divide P_d={p_data}"
+        )
+    n_slow = p_data // socket
+    p = np.arange(p_data)
+    return (p % n_slow) * socket + p // n_slow
+
+
+def _block_positions(sigma: np.ndarray, chunk: int) -> np.ndarray:
+    """Padded Hilbert index -> stored index under chunk layout ``sigma``
+    (stored block ``p`` holds Hilbert chunk ``sigma[p]``)."""
+    inv = np.empty_like(sigma)
+    inv[sigma] = np.arange(sigma.size)
+    i = np.arange(sigma.size * chunk)
+    return inv[i // chunk] * chunk + i % chunk
 
 
 def _build_operator(
@@ -284,11 +347,28 @@ def build_plan(
     align = max(8, R)
     tomo_chunk = _pad_to(int(math.ceil(geo.n_vox / P)), align)
     sino_chunk = _pad_to(int(math.ceil(geo.n_rays / P)), align)
-    proj = _build_operator(a_perm, cfg, sino_chunk, tomo_chunk)
-    back = _build_operator(a_perm.T.tocsr(), cfg, tomo_chunk, sino_chunk)
+    # Socket-aware chunk layout: relabel both vector spaces device-major
+    # (stored block p = Hilbert chunk sigma[p]) so every downstream
+    # consumer -- exchange tables, dense reduce-scatter ownership, the
+    # shards themselves -- keeps its identity owner = index // chunk
+    # arithmetic while sockets end up holding consecutive Hilbert chunks.
+    sigma = socket_chunk_layout(P, cfg.socket)
+    if cfg.socket > 1:
+        row_pos = _block_positions(sigma, sino_chunk)
+        col_pos = _block_positions(sigma, tomo_chunk)
+        coo = a_perm.tocoo()
+        a_dev = sp.csr_matrix(
+            (coo.data, (row_pos[coo.row], col_pos[coo.col])),
+            shape=(sino_chunk * P, tomo_chunk * P),
+        )
+    else:
+        row_pos = col_pos = None
+        a_dev = a_perm
+    proj = _build_operator(a_dev, cfg, sino_chunk, tomo_chunk)
+    back = _build_operator(a_dev.T.tocsr(), cfg, tomo_chunk, sino_chunk)
     return Plan(
         geo=geo, cfg=cfg, row_perm=row_perm, col_perm=col_perm,
-        proj=proj, back=back,
+        proj=proj, back=back, row_pos=row_pos, col_pos=col_pos,
     )
 
 

@@ -50,7 +50,10 @@ class ReconConfig:
     overlap: bool = True  # Fig. 8 pipelining
     use_ref: bool = False  # oracle instead of Pallas kernel
     interpret: bool | None = None  # Pallas interpret (auto off-TPU)
-    blocks_per_call: int | None = None  # window-staging chunk
+    staging: str = "fused"  # in-kernel window staging | legacy "gather"
+    # [deprecated] only the legacy gather path chunks its staging
+    # transient; the fused kernel's staging lives in VMEM.
+    blocks_per_call: int | None = None
 
 
 class Reconstructor:
@@ -114,6 +117,14 @@ class Reconstructor:
         self.topology = topology
         self.mesh = mesh = topology.mesh
         self.cfg = cfg
+        if cfg.blocks_per_call is not None:
+            warnings.warn(
+                "ReconConfig.blocks_per_call is deprecated: the default "
+                "fused staging has no HBM transient to chunk; it only "
+                'affects the legacy staging="gather" path',
+                DeprecationWarning,
+                stacklevel=2,
+            )
         self.abstract = abstract
         self.data_axes = topology.data_axes
         self.batch_axes = topology.batch_axes
@@ -123,6 +134,14 @@ class Reconstructor:
             raise ValueError(
                 f"plan has P_d={plan.cfg.n_data} but data axes "
                 f"{self.data_axes} have size {topology.n_data}"
+            )
+        fast = topology.levels[0].size if topology.levels else 1
+        if plan.cfg.socket not in (1, fast):
+            warnings.warn(
+                f"plan was laid out for socket={plan.cfg.socket} but the "
+                f"topology's fast level is {fast}-wide; the hier-sparse "
+                "dedup will not see consecutive chunks per socket",
+                stacklevel=2,
             )
         self.n_batch = topology.n_batch
         self._rank_rows = None  # lazy inverse row permutation
@@ -142,29 +161,45 @@ class Reconstructor:
         return self.plan.proj.n_rows_pad
 
     def pack_tomo(self, x_nat):
-        """[n_vox, Y] natural order -> [tomo_pad, Y] Hilbert order."""
+        """[n_vox, Y] natural order -> [tomo_pad, Y] stored (device-major
+        Hilbert) order; Hilbert chunks land on their owning device slot
+        per the plan's socket-aware layout (identity when socket == 1)."""
+        n = self.plan.geo.n_vox
         out = np.zeros((self.tomo_pad, x_nat.shape[1]), np.float32)
-        out[: self.plan.geo.n_vox] = np.asarray(x_nat)[self.plan.col_perm]
+        pos = self.plan.col_pos
+        dst = slice(None, n) if pos is None else pos[:n]
+        out[dst] = np.asarray(x_nat)[self.plan.col_perm]
         return out
 
     def unpack_tomo(self, x_curve):
         g = self.plan.geo
         if self._rank_cols is None:
+            pos = self.plan.col_pos
+            stored = (
+                np.arange(g.n_vox) if pos is None else pos[: g.n_vox]
+            )
             rank = np.empty(g.n_vox, np.int64)
-            rank[self.plan.col_perm] = np.arange(g.n_vox)
+            rank[self.plan.col_perm] = stored
             self._rank_cols = rank
         return np.asarray(x_curve)[self._rank_cols]
 
     def pack_sino(self, y_nat):
+        n = self.plan.geo.n_rays
         out = np.zeros((self.sino_pad, y_nat.shape[1]), np.float32)
-        out[: self.plan.geo.n_rays] = np.asarray(y_nat)[self.plan.row_perm]
+        pos = self.plan.row_pos
+        dst = slice(None, n) if pos is None else pos[:n]
+        out[dst] = np.asarray(y_nat)[self.plan.row_perm]
         return out
 
     def unpack_sino(self, y_curve):
         g = self.plan.geo
         if self._rank_rows is None:
+            pos = self.plan.row_pos
+            stored = (
+                np.arange(g.n_rays) if pos is None else pos[: g.n_rays]
+            )
             rank = np.empty(g.n_rays, np.int64)
-            rank[self.plan.row_perm] = np.arange(g.n_rays)
+            rank[self.plan.row_perm] = stored
             self._rank_rows = rank
         return np.asarray(y_curve)[self._rank_rows]
 
@@ -257,6 +292,7 @@ class Reconstructor:
                     compute_dtype=pol.compute,
                     use_ref=cfg.use_ref,
                     interpret=cfg.interpret,
+                    staging=cfg.staging,
                     blocks_per_call=cfg.blocks_per_call,
                 )
 

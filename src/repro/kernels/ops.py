@@ -1,10 +1,18 @@
 """jit'd wrappers around the XCT SpMM kernel.
 
 ``apply_operator`` is the single-device (shard-local) fused
-projection/backprojection: window staging (the XLA gather standing in for
-Listing 1's buffer-load loop) followed by the Pallas kernel.  The oracle
-equivalent lives in ``ref.py``; ``use_ref=True`` swaps it in so every higher
-layer can be validated against pure jnp with one flag.
+projection/backprojection.  The default path (``staging="fused"``) hands
+the whole local slab to the Pallas kernel, which streams each stage's
+window from HBM into VMEM itself (the paper's Listing 1 buffer-load
+loop) -- one HBM pass over operator data per minibatch, no staged window
+tensor, no transient-budget chunking.
+
+``staging="gather"`` keeps the legacy two-pass emulation for A/B
+benchmarking: an XLA gather materializes the ``[B, S, BUF, F]`` windows
+in HBM before the kernel runs, bounded by a ~64 MB transient budget
+(chunked over row-blocks with ``lax.scan``).  The oracle equivalent
+lives in ``ref.py``; ``use_ref=True`` swaps it in so every higher layer
+can be validated against pure jnp with one flag.
 """
 from __future__ import annotations
 
@@ -12,20 +20,22 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .xct_spmm import spmm_block_ell
+from .traffic import STAGINGS, staged_window_bytes
+from .xct_spmm import spmm_block_ell, spmm_block_ell_staged
 
 __all__ = ["apply_operator"]
 
 
-def _pick_blocks_per_call(b, s, buf, f, bytes_per, budget=64 << 20):
-    """Blocks whose staged windows fit a ~64 MB transient HBM budget.
+def _gather_blocks_per_call(b, s, buf, f, bytes_per, budget=64 << 20):
+    """Row-blocks whose gathered windows fit a ~64 MB transient budget.
 
-    The staging gather materializes [bpc, S, BUF, F] windows per inner-scan
-    step; bounding it keeps peak memory O(budget) instead of O(B) (the
-    paper's I/O-batch discipline applied to the buffer loads).  Must divide
-    ``b`` (B is padded to a multiple of 8 by the partitioner).
+    Only the legacy gather path needs this: it materializes
+    ``[bpc, S, BUF, F]`` windows per inner-scan step in the *storage*
+    dtype (``bytes_per`` is that dtype's itemsize -- sizing from 4 bytes
+    under-chunked by 2x in half/mixed modes).  Must divide ``b`` (B is
+    padded to a multiple of 8 by the partitioner).
     """
-    per_block = s * buf * f * bytes_per
+    per_block = staged_window_bytes(s, buf, f, bytes_per)
     want = max(1, budget // max(1, per_block))
     if want >= b:
         return b
@@ -45,6 +55,7 @@ def apply_operator(
     compute_dtype=jnp.float32,
     use_ref: bool = False,
     interpret: bool | None = None,
+    staging: str = "fused",
     blocks_per_call: int | None = None,
 ):
     """Shard-local fused SpMM: returns the fp32 partial rows [B*R, F].
@@ -55,32 +66,46 @@ def apply_operator(
         here -- the 2-byte HBM representation of the paper's packing --
         unless already narrow).
       winmap: [B, S, BUF] device-local input column ids.
-      x_loc: [C, F] local input slab (any float dtype; staged to
-        ``storage_dtype`` for the VMEM window, computed in
-        ``compute_dtype``).
-      blocks_per_call: row-blocks per inner scan step (bounds the transient
-        window-staging buffer); auto-sized when None.
+      x_loc: [C, F] local input slab (any float dtype; cast to
+        ``storage_dtype``, computed in ``compute_dtype``).
+      staging: "fused" (default) stages windows inside the kernel --
+        double-buffered HBM->VMEM copies, no intermediate tensor;
+        "gather" is the legacy two-pass XLA-gather path (A/B baseline).
+      blocks_per_call: [deprecated -- only the gather path chunks]
+        row-blocks per inner scan step; auto-sized when None.
     """
+    if staging not in STAGINGS:
+        raise ValueError(
+            f"unknown staging {staging!r}; one of {STAGINGS}"
+        )
     vals_s = vals.astype(storage_dtype)
     x_s = x_loc.astype(storage_dtype)
     b, s, r, k = inds.shape
     buf = winmap.shape[-1]
     f = x_loc.shape[-1]
 
+    if use_ref:
+        return ref.spmm_ref(
+            inds, vals_s, winmap, x_s, compute_dtype=compute_dtype
+        ).astype(jnp.float32)
+
+    if staging == "fused":
+        out = spmm_block_ell(
+            inds, vals_s, winmap, x_s,
+            compute_dtype=compute_dtype, interpret=interpret,
+        )
+        return out.reshape(b * r, f)
+
+    # --- legacy gather staging (A/B benchmarking baseline) -------------
     def one_chunk(ic, vc, wc):
-        if use_ref:
-            out = ref.spmm_ref(
-                ic, vc, wc, x_s, compute_dtype=compute_dtype
-            ).astype(jnp.float32)
-            return out.reshape(ic.shape[0], r, f)
         window = jnp.take(x_s, wc, axis=0)  # staging gather (HBM)
-        return spmm_block_ell(
+        return spmm_block_ell_staged(
             ic, vc, window, compute_dtype=compute_dtype,
             interpret=interpret,
         )
 
-    bpc = blocks_per_call or _pick_blocks_per_call(
-        b, s, max(buf, r * k), f, 4
+    bpc = blocks_per_call or _gather_blocks_per_call(
+        b, s, buf, f, jnp.dtype(storage_dtype).itemsize
     )
     if bpc >= b:
         return one_chunk(inds, vals_s, winmap).reshape(b * r, f)

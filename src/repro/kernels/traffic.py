@@ -1,0 +1,91 @@
+"""One HBM-traffic model for the blocked-ELL SpMM, shared by every layer.
+
+Historically four call sites hand-rolled the same byte accounting --
+``ops.apply_operator`` (staging-chunk sizing), ``benchmarks/bench_spmm``
+(arithmetic intensity), ``launch/xct_perf.sweep`` and
+``launch/dryrun.xct_analytic`` (roofline memory term) -- and they had
+already drifted (the chunk sizing assumed 4-byte windows while windows
+are staged in the 2-byte storage dtype).  This module is now the single
+source of truth.
+
+Per minibatch of ``F`` fused slices, one device's shard moves:
+
+  operator     B*S*R*K slots x (2 B index + ``sb`` B value)  -- one pass
+  winmap       B*S*BUF window ids x 4 B
+  window       staging="fused":  B*S*BUF*F*sb  (each window row crosses
+               HBM once: DMA'd straight into VMEM by the kernel)
+               staging="gather": 2 x B*S*BUF*F*sb  (the XLA gather
+               writes the [B, S, BUF, F] tensor to HBM, the kernel reads
+               it back -- the extra full pass the fused path deletes)
+  band out     B*R*F x 4 B fp32, written by the kernel and read by the
+               reduction scatter
+
+Doctest -- the fused path strictly raises arithmetic intensity (the
+acceptance criterion of the in-kernel-staging refactor):
+
+>>> g = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2,
+...                  staging="gather")
+>>> u = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2,
+...                  staging="fused")
+>>> u["hbm_bytes"] < g["hbm_bytes"]
+True
+>>> u["intensity"] > g["intensity"]
+True
+>>> g["hbm_bytes"] - u["hbm_bytes"] == g["window_bytes"] // 2
+True
+"""
+from __future__ import annotations
+
+__all__ = ["spmm_traffic", "staged_window_bytes"]
+
+STAGINGS = ("fused", "gather")
+
+
+def staged_window_bytes(s: int, buf: int, f: int,
+                        storage_bytes: int) -> int:
+    """Transient HBM bytes of ONE row-block's gathered windows.
+
+    Only the legacy gather path allocates this ``[S, BUF, F]`` tensor
+    (per row-block of the scan chunk); the fused kernel's staging lives
+    in VMEM (see ``xct_spmm.vmem_bytes``).
+    """
+    return s * buf * f * storage_bytes
+
+
+def spmm_traffic(
+    b: int,
+    s: int,
+    r: int,
+    k: int,
+    buf: int,
+    f: int,
+    *,
+    storage_bytes: int = 2,
+    staging: str = "fused",
+) -> dict:
+    """HBM bytes + FLOPs of one fused-minibatch SpMM over one shard.
+
+    Returns a dict with the per-term byte counts, their sum
+    (``hbm_bytes``), the slot FLOPs (``flops`` = 2 per nnz slot per
+    slice) and the arithmetic intensity (``intensity``, FLOP/B).
+    """
+    if staging not in STAGINGS:
+        raise ValueError(
+            f"unknown staging {staging!r}; one of {STAGINGS}"
+        )
+    slots = float(b) * s * r * k
+    win_entries = float(b) * s * buf
+    passes = 1 if staging == "fused" else 2
+    out = {
+        "operator_bytes": slots * (2 + storage_bytes),
+        "winmap_bytes": win_entries * 4,
+        "window_bytes": win_entries * storage_bytes * f * passes,
+        "out_bytes": float(b) * r * f * 4 * 2,
+        "flops": 2.0 * slots * f,
+    }
+    out["hbm_bytes"] = (
+        out["operator_bytes"] + out["winmap_bytes"]
+        + out["window_bytes"] + out["out_bytes"]
+    )
+    out["intensity"] = out["flops"] / out["hbm_bytes"]
+    return out

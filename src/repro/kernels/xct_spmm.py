@@ -1,25 +1,44 @@
 """XCT-optimized fused SpMM as a Pallas TPU kernel.
 
-TPU re-derivation of the paper's Listing 1 (Sec. III-B).  The CUDA kernel's
-mechanisms map as follows:
+TPU re-derivation of the paper's Listing 1 (Sec. III-B), including the
+*buffer-load loop* (lines 15-20): the kernel itself streams each stage's
+window of input rows from HBM into on-chip memory, so no staged window
+tensor ever exists in HBM.  The CUDA kernel's mechanisms map as follows:
 
-  shared-memory 3D input buffer  ->  VMEM window tile [BUF, F] delivered by
-                                     BlockSpec (one per (row-block, stage))
-  multi-stage buffering          ->  second grid dimension ``s``; the output
-                                     block is revisited across stages and
-                                     accumulated in fp32 (TPU grids execute
-                                     sequentially over revisited blocks)
-  register reuse across FFACTOR  ->  the fused-slice dim ``F`` is the minor
-                                     (lane) dimension; one {index, len} pair
-                                     drives an F-wide VPU FMA
-  {uint16, half} 4-byte packing  ->  int16 index tile + fp16/bf16 value tile
-                                     (4 B/nnz in HBM); upcast in-VREG
-  fp32 FMA on fp16 data          ->  explicit astype(compute_dtype) before
-                                     the multiply-accumulate
+  =============================  =======================================
+  Listing 1 (CUDA)               this kernel (Pallas TPU)
+  =============================  =======================================
+  shared-memory 3D input buffer  VMEM scratch ``win[2, BUF, F]``
+  buffer-load loop (l. 15-20)    per-row async DMAs HBM -> VMEM, driven
+                                 by the scalar-prefetched ``winmap``
+                                 (SMEM, ``PrefetchScalarGridSpec``)
+  multi-stage buffering          second grid dimension ``s``; the output
+                                 block is revisited across stages and
+                                 accumulated in fp32 (TPU grids execute
+                                 sequentially over revisited blocks)
+  __syncthreads() double-buffer  two window slots + DMA semaphores:
+                                 stage ``n+1``'s loads are issued before
+                                 stage ``n``'s FMAs run (overlap)
+  register reuse across FFACTOR  the fused-slice dim ``F`` is the minor
+                                 (lane) dimension; one {index, len} pair
+                                 drives an F-wide VPU FMA
+  {uint16, half} 4-byte packing  int16 index tile + fp16/bf16 value tile
+                                 (4 B/nnz in HBM); upcast in-VREG
+  fp32 FMA on fp16 data          explicit astype(compute_dtype) before
+                                 the multiply-accumulate
+  =============================  =======================================
 
-The kernel's working set per grid step (R*K indices + R*K values + BUF*F
-window + R*F accumulator) is sized to sit comfortably in VMEM; see
-``vmem_bytes`` below, used by the §Perf sweep.
+The input slab ``x`` is handed to the kernel whole, in ``ANY`` (compiler
+-chosen, HBM at size) memory space; each window row crosses HBM exactly
+once per stage.  The legacy two-pass path -- XLA gather materializing
+``[B, S, BUF, F]`` windows in HBM, then :func:`spmm_block_ell_staged` --
+is kept for A/B benchmarking under ``ops.apply_operator(staging=
+"gather")``.
+
+The double-buffered working set (R*K indices + R*K values + 2 window
+slots + R*F accumulator) is sized to sit in the paper's ~96 KB
+shared-memory budget; see ``vmem_bytes`` below, used by the §Perf sweep
+and pinned by ``tests/test_kernel_spmm.py``.
 """
 from __future__ import annotations
 
@@ -30,20 +49,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["spmm_block_ell", "vmem_bytes"]
+__all__ = [
+    "spmm_block_ell",
+    "spmm_block_ell_staged",
+    "vmem_bytes",
+    "smem_bytes",
+]
 
 
-def _spmm_kernel(inds_ref, vals_ref, win_ref, out_ref, *, compute_dtype):
-    """One (row-block, stage) step: out[R, F] += sum_k vals[:,k] * win[inds]."""
-    s = pl.program_id(1)
-
-    @pl.when(s == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
+def _fma_block(inds_ref, window, vals_ref, compute_dtype):
+    """out[R, F] = sum_k vals[:, k] * window[inds[:, k]] for one stage."""
     inds = inds_ref[0, 0].astype(jnp.int32)  # [R, K]
     vals = vals_ref[0, 0].astype(compute_dtype)  # [R, K]
-    window = win_ref[0, 0].astype(compute_dtype)  # [BUF, F]
+    window = window.astype(compute_dtype)  # [BUF, F]
     r, k = inds.shape
     f = window.shape[-1]
 
@@ -54,20 +72,111 @@ def _spmm_kernel(inds_ref, vals_ref, win_ref, out_ref, *, compute_dtype):
         gathered = jnp.take(window, col, axis=0)  # [R, F]
         return acc + vals[:, j][:, None] * gathered
 
-    acc = jax.lax.fori_loop(
+    return jax.lax.fori_loop(
         0, k, body, jnp.zeros((r, f), compute_dtype), unroll=4
     )
+
+
+def _spmm_fused_kernel(
+    winmap_ref,  # [B, S, BUF] int32, scalar-prefetched (SMEM)
+    inds_ref,  # [1, 1, R, K] int16 block (VMEM)
+    vals_ref,  # [1, 1, R, K] storage-dtype block (VMEM)
+    x_ref,  # [C, F] whole local slab (ANY -> HBM at size)
+    out_ref,  # [1, R, F] fp32 block, revisited across stages
+    win,  # VMEM scratch [2, BUF, F]: double-buffered window slots
+    sems,  # DMA semaphores [2]
+    *,
+    compute_dtype,
+    buf: int,
+):
+    """One (row-block, stage) grid step with in-kernel window staging."""
+    i, s = pl.program_id(0), pl.program_id(1)
+    n_s = pl.num_programs(1)
+    step = i * n_s + s  # linear stage counter across the whole grid
+    n_steps = pl.num_programs(0) * n_s
+
+    def window_dma(which, slot, op):
+        """Issue (or await) the buffer-load loop of linear stage
+        ``which`` into window slot ``slot``: one async row copy per
+        ``winmap`` entry, HBM -> VMEM (Listing 1 lines 15-20)."""
+        bi, si = which // n_s, which % n_s
+
+        def one_row(j, carry):
+            dma = pltpu.make_async_copy(
+                x_ref.at[winmap_ref[bi, si, j]],
+                win.at[slot, j],
+                sems.at[slot],
+            )
+            getattr(dma, op)()
+            return carry
+
+        jax.lax.fori_loop(0, buf, one_row, None)
+
+    @pl.when(step == 0)
+    def _prologue():  # no stage before the first: load it synchronously
+        window_dma(0, 0, "start")
+
+    @pl.when(step + 1 < n_steps)
+    def _prefetch():  # overlap stage step+1's loads with this stage's FMAs
+        window_dma(step + 1, (step + 1) % 2, "start")
+
+    window_dma(step, step % 2, "wait")
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
-def vmem_bytes(r: int, k: int, buf: int, f: int, store_bytes: int = 2) -> int:
-    """Per-grid-step VMEM footprint (the paper's 96 KB shared-mem budget)."""
+def _spmm_staged_kernel(
+    inds_ref, vals_ref, win_ref, out_ref, *, compute_dtype
+):
+    """Legacy step: windows pre-staged in HBM, delivered by BlockSpec."""
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = _fma_block(inds_ref, win_ref[0, 0], vals_ref, compute_dtype)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+def vmem_bytes(
+    r: int,
+    k: int,
+    buf: int,
+    f: int,
+    store_bytes: int = 2,
+    stages_buffered: int = 2,
+) -> int:
+    """Per-grid-step VMEM footprint (the paper's 96 KB shared-mem budget).
+
+    The fused path holds ``stages_buffered`` window slots (double
+    buffering: stage ``s+1`` streams in while stage ``s`` computes);
+    the staging memory is O(VMEM), not an O(64 MB) HBM transient.
+    """
     return (
         r * k * 2  # inds (int16)
         + r * k * store_bytes  # vals
-        + buf * f * store_bytes  # window
+        + stages_buffered * buf * f * store_bytes  # window slots
         + r * f * 4  # fp32 accumulator / output block
     )
+
+
+def smem_bytes(b: int, s: int, buf: int) -> int:
+    """Scalar-memory footprint of the prefetched ``winmap`` (int32).
+
+    The fused kernel prefetches the *whole* ``[B, S, BUF]`` winmap, so
+    this grows with the shard's block count B -- unlike ``vmem_bytes``,
+    which is per-grid-step.  Tier-1/bench shards sit far inside scalar
+    memory (pinned by ``tests/test_kernel_spmm.py``); production-B
+    shards need the winmap prefetch chunked over row-blocks before the
+    kernel is run on real hardware (ROADMAP: on-TPU validation).
+    """
+    return b * s * buf * 4
 
 
 @functools.partial(
@@ -76,18 +185,25 @@ def vmem_bytes(r: int, k: int, buf: int, f: int, store_bytes: int = 2) -> int:
 def spmm_block_ell(
     inds,
     vals,
-    window,
+    winmap,
+    x,
     *,
     compute_dtype=jnp.float32,
     interpret: bool | None = None,
 ):
-    """Fused multi-stage SpMM over one device's blocked-ELL shard.
+    """Fused multi-stage SpMM over one device's blocked-ELL shard, with
+    the window staging done *inside* the kernel (paper Listing 1).
 
     Args:
       inds:   [B, S, R, K] int16 window-local indices.
       vals:   [B, S, R, K] storage-dtype lengths.
-      window: [B, S, BUF, F] pre-staged input windows (the XLA gather that
-              plays the role of Listing 1's buffer-load loop, lines 15-20).
+      winmap: [B, S, BUF] int32 device-local input column ids; scalar-
+              prefetched to SMEM so the kernel can compute DMA source
+              addresses before each stage runs.
+      x:      [C, F] local input slab (storage dtype).  Stays whole in
+              HBM; the kernel double-buffers each stage's BUF-row window
+              into VMEM with async copies.  No ``[B, S, BUF, F]`` tensor
+              is ever materialized.
       compute_dtype: FMA dtype (fp32 for the paper's mixed mode).
       interpret: force Pallas interpret mode; defaults to True off-TPU.
 
@@ -97,12 +213,67 @@ def spmm_block_ell(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, s, r, k = inds.shape
-    buf, f = window.shape[-2:]
-    grid = (b, s)
-    kernel = functools.partial(_spmm_kernel, compute_dtype=compute_dtype)
+    buf = winmap.shape[-1]
+    f = x.shape[-1]
+    kernel = functools.partial(
+        _spmm_fused_kernel, compute_dtype=compute_dtype, buf=buf
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, s),
+        in_specs=[
+            pl.BlockSpec((1, 1, r, k), lambda i, j, wm: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, r, k), lambda i, j, wm: (i, j, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, r, f), lambda i, j, wm: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, buf, f), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
     return pl.pallas_call(
         kernel,
-        grid=grid,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
+        # cross-step window prefetch orders the whole grid
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(winmap.astype(jnp.int32), inds, vals, x)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("compute_dtype", "interpret")
+)
+def spmm_block_ell_staged(
+    inds,
+    vals,
+    window,
+    *,
+    compute_dtype=jnp.float32,
+    interpret: bool | None = None,
+):
+    """Legacy two-pass SpMM: consumes HBM-pre-staged windows.
+
+    Kept for A/B benchmarking against the fused path
+    (``ops.apply_operator(staging="gather")``): the caller materializes
+    ``window[B, S, BUF, F]`` with an XLA gather (one extra HBM round
+    trip) and BlockSpec delivers one ``[BUF, F]`` tile per grid step.
+
+    Returns [B, R, F] fp32 partial output band blocks.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, r, k = inds.shape
+    buf, f = window.shape[-2:]
+    kernel = functools.partial(
+        _spmm_staged_kernel, compute_dtype=compute_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s),
         in_specs=[
             pl.BlockSpec((1, 1, r, k), lambda i, j: (i, j, 0, 0)),
             pl.BlockSpec((1, 1, r, k), lambda i, j: (i, j, 0, 0)),

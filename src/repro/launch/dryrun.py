@@ -405,14 +405,18 @@ def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
 
     The minibatch pipeline and CG loop are lax.scans (counted once by
     cost_analysis), so FLOPs/bytes are computed from the static blocked-ELL
-    shapes instead: 2 FLOPs per nnz slot per fused slice, 4 B/slot operator
-    reads (paper packing), and window staging traffic.  The exchange
+    shapes instead, via the shared ``kernels.traffic.spmm_traffic`` model
+    (2 FLOPs per nnz slot per fused slice, 4 B/slot operator reads, and
+    the staging term matching ``rcfg.staging`` -- the default in-kernel
+    staging has no HBM window round trip, so modeled arithmetic intensity
+    is strictly higher than the legacy gather baseline).  The exchange
     volume per reduction is whatever ``topo.plan(rcfg.comm_mode)`` models
     for each link class -- one source of truth shared with the runtime
     collectives and ``benchmarks/bench_comms.py``.
     """
     from ..core.partition import exchange_volume_params
     from ..core.precision import get_policy
+    from ..kernels.traffic import spmm_traffic
 
     pol = get_policy(rcfg.precision)
     sb, cb = pol.storage_bytes, pol.comm_bytes
@@ -420,15 +424,12 @@ def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
            "dci_dev": 0.0}
     for op in (plan.proj, plan.back):
         _, b, s, r, k = op.inds.shape
-        buf = op.winmap.shape[-1]
-        slots = float(b) * s * r * k
-        out["flops_dev"] += iters * 2.0 * slots * fuse
-        # A read (2B idx + sb val), winmap, window write+read, band out
-        out["hbm_dev"] += iters * (
-            slots * (2 + sb)
-            + float(b) * s * buf * (4 + 2 * sb * fuse)
-            + float(b) * r * fuse * 4 * 2
+        t = spmm_traffic(
+            b, s, r, k, op.winmap.shape[-1], fuse, storage_bytes=sb,
+            staging=getattr(rcfg, "staging", "fused"),
         )
+        out["flops_dev"] += iters * t["flops"]
+        out["hbm_dev"] += iters * t["hbm_bytes"]
         dense = float(op.n_rows_pad) * fuse * cb
         params = (
             exchange_volume_params(op, topo)

@@ -57,6 +57,7 @@ from ..core.partition import (
     exchange_volume_params,
 )
 from ..dist import MODES, Topology
+from ..kernels.traffic import spmm_traffic
 from .hlo_analysis import HW
 
 __all__ = ["comm_volume", "sweep_topology", "sweep"]
@@ -109,7 +110,14 @@ def comm_volume(plan, mode: str, fuse: int, comm_bytes: int,
     return out
 
 
-def sweep(dataset="xct-brain", p_data=512, iters=30):
+def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused"):
+    """Full mode x fuse sweep of the analytic cost model.
+
+    ``staging`` selects the SpMM memory-traffic model: the default
+    in-kernel staging moves each window row over HBM once; the legacy
+    ``"gather"`` baseline pays the extra staged-window round trip
+    (``kernels.traffic.spmm_traffic`` is the shared formula).
+    """
     ds = DATASETS[dataset]
     geo = XCTGeometry(n=ds.n, n_angles=ds.k)
     pcfg = PartitionConfig(
@@ -126,14 +134,12 @@ def sweep(dataset="xct-brain", p_data=512, iters=30):
             hbm = 0.0
             for op in (plan.proj, plan.back):
                 _, b, s, r, k = op.inds.shape
-                buf = op.winmap.shape[-1]
-                slots = float(b) * s * r * k
-                flops += iters * 2.0 * slots * fuse
-                hbm += iters * (
-                    slots * (2 + sb)
-                    + float(b) * s * buf * (4 + 2 * sb * fuse)
-                    + float(b) * r * fuse * 4 * 2
+                t = spmm_traffic(
+                    b, s, r, k, op.winmap.shape[-1], fuse,
+                    storage_bytes=sb, staging=staging,
                 )
+                flops += iters * t["flops"]
+                hbm += iters * t["hbm_bytes"]
             cv = comm_volume(plan, mode, fuse, sb, topo)
             t_comp = flops / HW.peak_flops
             t_mem = hbm / HW.hbm_bw

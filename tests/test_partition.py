@@ -106,3 +106,56 @@ def test_estimate_plan_shapes_cover_reality():
         assert e.n_cols_pad == r.n_cols_pad
         # total slot capacity within 4x of real padded allocation
         assert 0.25 < e.padded_nnz / r.padded_nnz < 6.0, name
+
+
+def test_socket_layout_reconstructs_matrix():
+    """socket=G relabels both vector spaces device-major (stored block p
+    = Hilbert chunk sigma[p]); the blocked-ELL shards must reconstruct
+    exactly the relabeled operator, and the layout maps must be the
+    block permutation they claim to be."""
+    from repro.core.partition import socket_chunk_layout
+
+    geo = XCTGeometry(n=16, n_angles=12)
+    a = build_system_matrix(geo)
+    cfg = PartitionConfig(
+        n_data=4, tile=4, rows_per_block=8, nnz_per_stage=8, socket=2
+    )
+    plan = build_plan(geo, cfg, a=a)
+    sigma = socket_chunk_layout(4, 2)
+    # socket t = slots {t, 2 + t} (fast-major, n_slow = 2) owns
+    # consecutive Hilbert chunks {2t, 2t + 1}
+    assert sigma.tolist() == [0, 2, 1, 3]
+    # layout maps are bijections on the padded spaces
+    for pos, pad in (
+        (plan.row_pos, plan.proj.n_rows_pad),
+        (plan.col_pos, plan.proj.n_cols_pad),
+    ):
+        assert pos.shape == (pad,)
+        assert np.array_equal(np.sort(pos), np.arange(pad))
+    # shards reconstruct the relabeled matrix
+    ap = a[plan.row_perm][:, plan.col_perm].tocsr()
+    dense = _materialize(
+        plan.proj, plan.proj.n_rows_pad, plan.proj.n_cols_pad
+    )
+    want = np.zeros_like(dense)
+    rows = plan.row_pos[: geo.n_rays]
+    cols = plan.col_pos[: geo.n_vox]
+    want[np.ix_(rows, cols)] = ap.toarray()
+    assert np.allclose(dense, want, atol=1e-6)
+
+
+def test_socket_layout_requires_divisibility():
+    from repro.core.partition import socket_chunk_layout
+
+    with pytest.raises(ValueError):
+        socket_chunk_layout(4, 3)
+
+
+def test_hbm_bytes_counts_resident_operator_only(small_system):
+    """Regression: ``hbm_bytes`` crashed on a phantom ``block_rows``
+    attribute; it must count packed nnz + int32 metadata and nothing
+    staging-related (in-kernel staging has no HBM window tensor)."""
+    _, _, plan = small_system
+    op = plan.proj
+    want = op.padded_nnz * 4 + (op.winmap.size + op.row_map.size) * 4
+    assert op.hbm_bytes() == want
