@@ -1,0 +1,86 @@
+"""Out-of-core streaming throughput: slices/s vs slab size x overlap.
+
+One row per (Y_slab, prefetch-overlap) cell: the whole sinogram lives in
+an on-disk ``repro.stream.SlabStore``, the drain runs budget-shaped slabs
+through the solver, and the derived fields carry slices/s plus the
+modeled per-slab HBM traffic and arithmetic intensity from
+``stream.scheduler.suggest_slab`` (same ``kernels.traffic`` formula the
+roofline sweeps use).  Emits ``BENCH_stream.json`` via
+``benchmarks.common.emit`` (CI's bench-smoke job uploads it).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import os
+
+from repro.core.geometry import XCTGeometry, build_system_matrix
+from repro.core.partition import PartitionConfig, build_plan
+from repro.core.recon import ReconConfig, Reconstructor
+from repro.stream import SlabStore, reconstruct_streaming, simulate_to_store
+from repro.stream.scheduler import SlabPlan, suggest_slab  # noqa: F401
+
+from .common import emit
+
+
+def run(n: int = 48, iters: int = 6, quick: bool = False):
+    if quick:
+        n, iters = 32, 4
+    y_total = 8 if quick else 16
+    geo = XCTGeometry(n=n, n_angles=max(16, n // 2))
+    a = build_system_matrix(geo)
+    plan = build_plan(
+        geo,
+        PartitionConfig(n_data=1, tile=8, rows_per_block=16,
+                        nnz_per_stage=16),
+        a=a,
+    )
+    cfg = ReconConfig(precision="mixed", comm_mode="hier", fuse=2)
+    rec = Reconstructor(plan, cfg=cfg)
+    granule = rec.n_batch * cfg.fuse
+    workdir = tempfile.mkdtemp(prefix="bench_stream_")
+    try:
+        sino = SlabStore.create(
+            os.path.join(workdir, "sino"), geo.n_rays, y_total, granule
+        )
+        simulate_to_store(a, n, sino, noise=0.0, seed=0)
+        slabs = sorted({granule, y_total // 2, y_total})
+        for y_slab in slabs:
+            for overlap in (False, True):
+                tag = "overlap" if overlap else "sync"
+                out = os.path.join(workdir, f"vol_{y_slab}_{tag}")
+                # rep 0 is warmup (compiles the slab shape), not timed
+                ts = []
+                for rep in range(2 if quick else 3):
+                    shutil.rmtree(out, ignore_errors=True)
+                    t0 = time.perf_counter()
+                    reconstruct_streaming(
+                        rec, sino, out, iters=iters, y_slab=y_slab,
+                        overlap=overlap,
+                    )
+                    if rep:
+                        ts.append(time.perf_counter() - t0)
+                t = min(ts)
+                sp = suggest_slab(
+                    plan, cfg, rec.topology,
+                    # large budget: we only want the traffic model of
+                    # this slab size, not a re-size
+                    1 << 40, n_slices=y_slab, overlap=overlap,
+                )
+                ai = sp.slab_flops / max(sp.slab_hbm_bytes, 1.0)
+                emit(
+                    f"stream/slab{y_slab}/{tag}",
+                    t * 1e6,
+                    f"slices_per_s={y_total / t:.2f} y_slab={y_slab} "
+                    f"slabs={-(-y_total // y_slab)} iters={iters} "
+                    f"ai={ai:.3f}flop/B "
+                    f"slab_hbm_mb={sp.slab_hbm_bytes / 2**20:.1f}",
+                )
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   comm_volumes    Table IV + Fig. 11  per-hierarchy-level volumes
   scaling_*       Fig. 12  strong / weak scaling
   convergence     Fig. 13  residual vs precision (f64 via subprocess)
+  stream          Sec. III-E out-of-core: slices/s vs slab size x overlap
 
 ``--quick`` shrinks problem sizes (used by CI).
 """
@@ -22,13 +23,13 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        help="comma list: spmm,recon,comms,scaling,convergence",
+        help="comma list: spmm,recon,comms,scaling,convergence,stream",
     )
     args = ap.parse_args(argv)
 
     from . import (
         bench_comms, bench_convergence, bench_recon, bench_scaling,
-        bench_spmm, common,
+        bench_spmm, bench_stream, common,
     )
 
     common.reset()  # fresh BENCH_<suite>.json rows for this invocation
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         "comms": bench_comms.run,
         "scaling": bench_scaling.run,
         "convergence": bench_convergence.run,
+        "stream": bench_stream.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     print("name,us_per_call,derived")

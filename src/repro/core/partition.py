@@ -41,6 +41,7 @@ __all__ = [
     "build_plan",
     "build_sparse_exchange",
     "build_hier_sparse_exchange",
+    "default_socket",
     "estimate_hier_sparse",
     "exchange_volume_params",
     "socket_chunk_layout",
@@ -420,6 +421,9 @@ def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
         )
         op.est_v = v  # type: ignore[attr-defined]
         op.est_foot = foot  # type: ignore[attr-defined]
+        # chunk layout marker: lets estimate_hier_sparse pick the
+        # adjacent-chunk union model for socket-aware plans
+        op.est_socket = cfg.socket  # type: ignore[attr-defined]
         return op
 
     proj = one(geo.n_rays, geo.n_vox, sino_chunk, tomo_chunk)
@@ -579,24 +583,67 @@ def build_hier_sparse_exchange(
 
 
 def estimate_hier_sparse(
-    op: OperatorShards, fast: int, n_slow: int
+    op: OperatorShards,
+    fast: int,
+    n_slow: int,
+    *,
+    socket_aware: bool | None = None,
 ) -> tuple[int, int]:
     """Estimated ``(W, V2)`` for abstract plans (no tables built).
 
-    Socket members' footprints are modeled as independent draws of
-    ``est_foot`` rows from the padded row space, so the merged band is
-    ``R * (1 - (1 - foot/R)^G)`` rows -- the union shrinks towards ``R``
-    as footprints overlap.  ``V2`` carries the usual ~1.6x imbalance
-    margin over the even split of a W-group across slow peers.
+    Two union models, selected by the plan's chunk layout:
+
+      * legacy scattered layout (``PartitionConfig(socket=1)``): socket
+        members' footprints are independent draws of ``est_foot`` rows
+        from the padded row space, so the merged band is
+        ``R * (1 - (1 - foot/R)^G)`` rows;
+      * socket-aware layout (``socket=G``; the default the dry-run sweep
+        picked, see ``launch.dryrun.socket_sweep``): members own *G
+        consecutive* Hilbert chunks, i.e. one contiguous subdomain
+        covering ``1/n_slow`` of the curve, so the union follows the
+        same sqrt shadow law as a single subdomain's footprint:
+        ``min(R, 1.9 * R / sqrt(n_slow))``.  The constant is calibrated
+        against measured ``build_hier_sparse_exchange`` tables at
+        n in [32, 64] (est/real W in [0.9, 1.6]; pinned by
+        ``tests/test_partition.py::test_estimate_hier_sparse_adjacent``)
+        the same way ``estimate_plan``'s constants were.  At xct-brain
+        scale the adjacent model is ~2.3x tighter than the
+        independent-draw union (which the ROADMAP flagged as
+        overstating W for socket-aware plans).
+
+    ``socket_aware=None`` infers the layout from the operator's
+    ``est_socket`` attribute (attached by :func:`estimate_plan` from
+    ``cfg.socket``).  ``V2`` carries the usual ~1.6x imbalance margin
+    over the even split of a W-group across slow peers.
     """
     rows = float(op.n_rows_pad)
     foot = float(getattr(op, "est_foot", 0.0)) or 1.8 * rows / math.sqrt(
         max(1, fast * n_slow)
     )
-    union = rows * (1.0 - (1.0 - min(1.0, foot / rows)) ** fast)
+    if socket_aware is None:
+        socket_aware = fast > 1 and getattr(op, "est_socket", 1) == fast
+    if socket_aware:
+        union = max(
+            foot, min(rows, 1.9 * rows / math.sqrt(max(1, n_slow)))
+        )
+    else:
+        union = rows * (1.0 - (1.0 - min(1.0, foot / rows)) ** fast)
     w = _pad_to(max(8, int(math.ceil(union / fast))), 8)
     v2 = _pad_to(max(8, int(1.6 * w / max(1, n_slow))), 8)
     return w, v2
+
+
+def default_socket(p_data: int, fast: int) -> int:
+    """The socket layout a driver should use for a ``fast``-wide ladder.
+
+    The ROADMAP's dry-run sweep at xct-brain scale
+    (``launch.dryrun.socket_sweep``: socket=1 vs socket=fast-size at
+    P_d = 512) picked the socket-aware layout -- consecutive Hilbert
+    chunks per socket shrink the hier-sparse merged band, strictly
+    reducing modeled DCI.  So: ``fast`` whenever it legally divides the
+    device count, else the legacy scattered layout.
+    """
+    return fast if fast > 1 and p_data % fast == 0 else 1
 
 
 def exchange_volume_params(op: OperatorShards, topo) -> dict:

@@ -331,7 +331,9 @@ def lower_xct_cell(dataset: str, multi_pod: bool, iters: int = 2) -> dict:
     """Dry-run the XCT CG step at full dataset scale (abstract shards)."""
     from ..configs.xct_datasets import DATASETS
     from ..core.geometry import XCTGeometry
-    from ..core.partition import PartitionConfig, estimate_plan
+    from ..core.partition import (
+        PartitionConfig, default_socket, estimate_plan,
+    )
     from ..core.recon import ReconConfig, Reconstructor
 
     from ..dist import Topology
@@ -351,7 +353,8 @@ def lower_xct_cell(dataset: str, multi_pod: bool, iters: int = 2) -> dict:
         p_data = min(p_data, 256)
     geo = XCTGeometry(n=ds.n, n_angles=ds.k)
     pcfg = PartitionConfig(
-        n_data=p_data, tile=32, rows_per_block=64, nnz_per_stage=64
+        n_data=p_data, tile=32, rows_per_block=64, nnz_per_stage=64,
+        socket=default_socket(p_data, mesh.shape["model"]),
     )
     plan = estimate_plan(geo, pcfg)
     rcfg = ReconConfig(precision="mixed_bf16", comm_mode="hier", fuse=16,
@@ -400,6 +403,60 @@ def lower_xct_cell(dataset: str, multi_pod: bool, iters: int = 2) -> dict:
     }
 
 
+def socket_sweep(
+    dataset: str = "xct-brain",
+    p_data: int = 512,
+    fuse: int = 16,
+    comm_bytes: int = 2,
+) -> dict:
+    """ROADMAP sweep: ``PartitionConfig(socket=1)`` vs ``socket=fast``.
+
+    Compares the modeled hier-sparse wire volume of the legacy scattered
+    chunk layout (socket members' footprints ~ independent draws) against
+    the socket-aware layout (members own consecutive Hilbert chunks;
+    adjacent-chunk union model, ``core.partition.estimate_hier_sparse``)
+    at production scale, on the production ladder
+    (``xct_perf.sweep_topology``).  The winner is what
+    ``core.partition.default_socket`` hands every driver.
+
+    >>> sw = socket_sweep()
+    >>> sw["fast"]
+    16
+    >>> sw["socket=16"]["dci"] < sw["socket=1"]["dci"]
+    True
+    >>> sw["winner"]
+    16
+    """
+    from ..configs.xct_datasets import DATASETS
+    from ..core.geometry import XCTGeometry
+    from ..core.partition import PartitionConfig, estimate_plan
+    from .xct_perf import comm_volume, sweep_topology
+
+    ds = DATASETS[dataset]
+    geo = XCTGeometry(n=ds.n, n_angles=ds.k)
+    topo = sweep_topology(p_data)
+    fast = topo.levels[0].size
+    out = {"dataset": dataset, "p_data": p_data, "fast": fast}
+    for socket in (1, fast):
+        plan = estimate_plan(
+            geo,
+            PartitionConfig(
+                n_data=p_data, tile=32, rows_per_block=64,
+                nnz_per_stage=64, socket=socket,
+            ),
+        )
+        out[f"socket={socket}"] = comm_volume(
+            plan, "hier-sparse", fuse, comm_bytes, topo
+        )
+    key = "dci" if out[f"socket={fast}"]["dci"] else "ici"
+    out["winner"] = (
+        fast
+        if out[f"socket={fast}"][key] < out["socket=1"][key]
+        else 1
+    )
+    return out
+
+
 def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
     """Slot-exact per-device cost model for the XCT CG step.
 
@@ -446,6 +503,10 @@ def main():
     ap.add_argument("--arch", choices=ARCH_NAMES)
     ap.add_argument("--shape", choices=tuple(SHAPES))
     ap.add_argument("--xct")
+    ap.add_argument(
+        "--socket-sweep", action="store_true",
+        help="socket=1 vs socket=fast hier-sparse volume at xct scale",
+    )
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument(
@@ -479,7 +540,9 @@ def main():
             with open(args.out, "w") as f:
                 json.dump(results, f, indent=1, default=str)
 
-    if args.xct:
+    if args.socket_sweep:
+        run(socket_sweep, args.xct or "xct-brain")
+    elif args.xct:
         run(lower_xct_cell, args.xct, args.multi_pod)
     elif args.all:
         for arch in ARCH_NAMES:

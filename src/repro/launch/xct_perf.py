@@ -53,6 +53,7 @@ from ..configs.xct_datasets import DATASETS
 from ..core.geometry import XCTGeometry
 from ..core.partition import (
     PartitionConfig,
+    default_socket,
     estimate_plan,
     exchange_volume_params,
 )
@@ -120,11 +121,12 @@ def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused"):
     """
     ds = DATASETS[dataset]
     geo = XCTGeometry(n=ds.n, n_angles=ds.k)
+    topo = sweep_topology(p_data)
     pcfg = PartitionConfig(
-        n_data=p_data, tile=32, rows_per_block=64, nnz_per_stage=64
+        n_data=p_data, tile=32, rows_per_block=64, nnz_per_stage=64,
+        socket=default_socket(p_data, topo.levels[0].size),
     )
     plan = estimate_plan(geo, pcfg)
-    topo = sweep_topology(p_data)
     rows = []
     nnz_total = geo.n_rays * 1.195 * ds.n
     for mode in MODES:

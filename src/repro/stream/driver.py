@@ -1,0 +1,213 @@
+"""Out-of-core streaming reconstruction: drain slabs through the solver.
+
+``reconstruct_streaming`` turns a :class:`~repro.stream.store.SlabStore`
+sinogram into a volume store without ever holding more than one slab (two
+with prefetch) in host memory:
+
+  1. size the slab from the byte budget (``scheduler.suggest_slab``) or
+     take an explicit ``y_slab``;
+  2. restore the resume manifest (``ckpt.checkpoint``) and skip slabs
+     already recorded done -- slices are independent least-squares
+     problems sharing ``A`` (parallel-beam, paper Sec. II-B), so a
+     restart that re-solves only the remaining slabs converges to the
+     identical volume;
+  3. for each pending slab: prefetch slab ``i+1`` from disk while slab
+     ``i`` solves (``scheduler.Prefetcher``, the Fig. 8 overlap lifted
+     one level up the memory hierarchy), run the in-memory
+     ``Reconstructor.reconstruct`` on the slab, write the reconstructed
+     slab to the volume store (atomic shard publish);
+  4. checkpoint the manifest every ``k`` slabs, ``k`` from the measured
+     slab/write times via the Young/Daly optimum
+     (``dist.fault.suggest_checkpoint_period``) unless pinned by
+     ``checkpoint_every``.
+
+Because the per-slice math in ``Reconstructor.reconstruct`` never couples
+slices (CG scalars, normalization, and the solve itself are all
+column-wise), the streamed volume equals the one-shot in-memory volume
+slice for slice, for *any* slab size -- pinned by
+``tests/test_stream.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from ..ckpt import checkpoint as ckpt
+from ..dist.fault import suggest_checkpoint_period
+from .scheduler import Prefetcher, suggest_slab
+from .store import SlabStore
+
+__all__ = ["StreamResult", "reconstruct_streaming"]
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """What one (possibly resumed, possibly interrupted) drain did."""
+
+    volume: SlabStore  # the output store (complete iff slabs all done)
+    resnorms: np.ndarray  # [iters, Y] per-slice residuals (0 = unsolved)
+    y_slab: int
+    solved: list  # slab starts solved by THIS call
+    skipped: list  # slab starts skipped via the resume manifest
+    slab_seconds: list  # wall time per solved slab
+
+    @property
+    def complete(self) -> bool:
+        return self.volume.complete()
+
+
+def _manifest_like(n_slabs: int, iters: int, n_slices: int) -> dict:
+    return {
+        "done": np.zeros(n_slabs, np.uint8),
+        "res": np.zeros((iters, n_slices), np.float32),
+        "y_slab": np.zeros((), np.int64),
+    }
+
+
+def reconstruct_streaming(
+    rec,
+    sino_store: SlabStore,
+    out_dir: str,
+    *,
+    iters: int = 30,
+    mem_budget: int | None = None,
+    y_slab: int | None = None,
+    ckpt_dir: str | None = None,
+    overlap: bool = True,
+    checkpoint_every: int | None = None,
+    max_slabs: int | None = None,
+) -> StreamResult:
+    """Reconstruct a stored sinogram slab-by-slab into a volume store.
+
+    Args:
+      rec: a ``core.recon.Reconstructor`` (its plan's geometry must match
+        the store's row count).
+      sino_store: measurements, ``[n_rays, Y]`` in natural order.
+      out_dir: directory for the output volume store (``[n_vox, Y]``).
+      iters: CG iterations per slab (the paper's 30).
+      mem_budget: total bytes for operator + in-flight slabs; sizes the
+        slab via ``scheduler.suggest_slab``.  Exactly one of
+        ``mem_budget`` / ``y_slab`` must be given.
+      y_slab: explicit slab size (multiple of ``n_batch * fuse``).
+      ckpt_dir: resume-manifest directory; restart skips slabs recorded
+        done there.  ``None`` disables checkpointing.
+      overlap: prefetch the next slab while the current one solves.
+      checkpoint_every: manifest cadence in slabs; ``None`` derives it
+        from measured slab/write costs (Young/Daly).
+      max_slabs: stop after solving this many slabs (simulated
+        preemption for tests/examples); the manifest is saved first.
+    """
+    if (mem_budget is None) == (y_slab is None):
+        raise ValueError("pass exactly one of mem_budget= / y_slab=")
+    geo = rec.plan.geo
+    if sino_store.rows != geo.n_rays:
+        raise ValueError(
+            f"store has {sino_store.rows} rows, plan expects "
+            f"{geo.n_rays} rays"
+        )
+    n_slices = sino_store.n_slices
+    granule = rec.n_batch * rec.cfg.fuse
+    if n_slices % granule:
+        raise ValueError(
+            f"slice count {n_slices} must be a multiple of "
+            f"batch x fuse = {granule}"
+        )
+    if y_slab is None:
+        y_slab = suggest_slab(
+            rec.plan, rec.cfg, rec.topology, mem_budget,
+            n_slices=n_slices, overlap=overlap,
+        ).y_slab
+    if y_slab % granule:
+        raise ValueError(f"y_slab {y_slab} not a multiple of {granule}")
+    volume = SlabStore.create(
+        out_dir, geo.n_vox, n_slices, y_slab, np.float32
+    )
+    slabs = volume.slabs()
+
+    # ---- resume manifest -------------------------------------------- #
+    done = np.zeros(len(slabs), np.uint8)
+    res = np.zeros((iters, n_slices), np.float32)
+    if ckpt_dir is not None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is not None:
+            try:
+                state = ckpt.restore(
+                    ckpt_dir, step,
+                    _manifest_like(len(slabs), iters, n_slices),
+                )
+            except (ValueError, AssertionError) as e:
+                # shape drift inside restore means the run parameters
+                # changed; surface the actual knobs, not leaf shapes
+                raise ValueError(
+                    f"resume manifest in {ckpt_dir} does not match this "
+                    f"run (y_slab={y_slab}, iters={iters}, "
+                    f"Y={n_slices}); restart with the original settings "
+                    f"or clear the manifest [{e}]"
+                ) from e
+            if int(state["y_slab"]) != y_slab:
+                raise ValueError(
+                    f"resume manifest was written with y_slab="
+                    f"{int(state['y_slab'])}, this run uses {y_slab}"
+                )
+            done, res = state["done"], state["res"]
+
+    def save_manifest():
+        if ckpt_dir is None:
+            return 0.0
+        t0 = time.perf_counter()
+        ckpt.save(
+            ckpt_dir, int(done.sum()),
+            {"done": done, "res": res,
+             "y_slab": np.asarray(y_slab, np.int64)},
+        )
+        return time.perf_counter() - t0
+
+    pending = [i for i in range(len(slabs)) if not done[i]]
+    if max_slabs is not None:
+        pending = pending[:max_slabs]
+    skipped = [slabs[i][0] for i in range(len(slabs)) if done[i]]
+    solved: list = []
+    slab_seconds: list = []
+    n_nodes = max(1, rec.mesh.size)
+    every = checkpoint_every
+    since_save = 0
+
+    fetch = lambda i: sino_store.read(*slabs[i])  # noqa: E731
+    for i, y_nat in Prefetcher(
+        fetch, pending, depth=1, enabled=overlap
+    ):
+        j0, j1 = slabs[i]
+        t0 = time.perf_counter()
+        x, r = rec.reconstruct(y_nat, iters=iters)
+        volume.write(j0, x)
+        dt = time.perf_counter() - t0
+        res[:, j0:j1] = r
+        done[i] = 1
+        solved.append(j0)
+        slab_seconds.append(dt)
+        since_save += 1
+        if every is None and ckpt_dir is not None:
+            # first slab: measure one save, then derive the Young/Daly
+            # cadence from the measured write cost and slab time
+            write_cost = save_manifest()
+            since_save = 0
+            period = suggest_checkpoint_period(
+                max(write_cost, 1e-6), n_nodes
+            )
+            every = max(1, int(period / max(dt, 1e-9)))
+        elif every is not None and since_save >= every:
+            save_manifest()
+            since_save = 0
+    if since_save and ckpt_dir is not None:
+        save_manifest()
+    return StreamResult(
+        volume=volume,
+        resnorms=res,
+        y_slab=int(y_slab),
+        solved=solved,
+        skipped=skipped,
+        slab_seconds=slab_seconds,
+    )

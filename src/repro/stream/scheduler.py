@@ -1,0 +1,200 @@
+"""Slab scheduling: size I/O batches from a memory budget, prefetch ahead.
+
+The paper's Sec. III-E structures one reconstruction as ``Y`` slices
+drained in I/O batches, each solved as ``Y_slab / F`` fused minibatches.
+This module picks ``Y_slab`` from a *byte budget* instead of assuming the
+whole volume fits:
+
+  budget >= fixed + Y_slab * per_slice
+
+``fixed`` is the resident operator footprint (both blocked-ELL shards,
+``OperatorShards.hbm_bytes`` at the precision policy's storage width --
+parallel-beam geometry shares one ``A`` across every slab, so streaming
+re-pays this never).  ``per_slice`` is the per-slice working set:
+
+  * CGNR state on device, summed over the data-parallel shards: three
+    tomogram-space vectors (``x``, ``p``, ``s``) and three sinogram-space
+    vectors (``y``, ``r``, ``q``) per slice, kept f32 (4 B) -- see
+    ``core.solver.cgnr``;
+  * host staging of the sinogram slab in and the volume slab out
+    (``4 * (rows_pad + cols_pad)``), doubled when the prefetcher
+    double-buffers (slab ``i+1`` loads while slab ``i`` solves).
+
+``Y_slab`` is rounded down to the solve granule ``n_batch * fuse``
+(``Reconstructor`` requires it) and capped at ``Y``.  The plan also
+carries the modeled HBM traffic of one slab solve
+(``kernels.traffic.spmm_traffic``, the same model the roofline sweeps
+use) and the kernel's VMEM double-buffer footprint
+(``kernels.xct_spmm.vmem_bytes``) so callers can report modeled
+arithmetic intensity per slab without re-deriving byte counts.
+
+:class:`Prefetcher` is the host half of the Fig. 8 overlap, one level up
+the hierarchy: a single background thread fetches slab ``i+1`` from the
+store while the solver owns slab ``i`` -- same pipeline shape as the
+in-solve minibatch overlap (``core.pipeline``), applied to disk -> host
+instead of compute -> wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Iterable, Sequence
+
+__all__ = ["SlabPlan", "suggest_slab", "Prefetcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabPlan:
+    """A sized streaming schedule (see :func:`suggest_slab`)."""
+
+    y_slab: int  # slices per I/O batch (multiple of granule)
+    granule: int  # n_batch * fuse, the solve quantum
+    fixed_bytes: int  # resident operator footprint
+    per_slice_bytes: int  # working set per slice (device + host staging)
+    slab_hbm_bytes: float  # modeled kernel HBM traffic per slab per iter
+    slab_flops: float  # modeled kernel FLOPs per slab per iter
+    vmem_bytes: int  # kernel double-buffer footprint per device
+
+    @property
+    def slab_bytes(self) -> int:
+        """Peak bytes while one slab is in flight."""
+        return self.fixed_bytes + self.y_slab * self.per_slice_bytes
+
+    def n_slabs(self, n_slices: int) -> int:
+        return int(math.ceil(n_slices / self.y_slab))
+
+
+def _op_traffic(op, fuse: int, storage_bytes: int) -> tuple[float, float]:
+    from ..kernels.traffic import spmm_traffic
+
+    _, b, s, r, k = op.inds.shape
+    t = spmm_traffic(
+        b, s, r, k, op.winmap.shape[-1], fuse,
+        storage_bytes=storage_bytes, staging="fused",
+    )
+    return t["hbm_bytes"], t["flops"]
+
+
+def suggest_slab(
+    plan,
+    cfg,
+    topology,
+    mem_budget: int,
+    *,
+    n_slices: int | None = None,
+    overlap: bool = True,
+) -> SlabPlan:
+    """Pick the largest budget-fitting ``Y_slab`` for a partition plan.
+
+    Args:
+      plan: ``core.partition.Plan`` (real or ``estimate_plan`` abstract --
+        only static shapes are consulted, so budget planning at xct-brain
+        scale allocates nothing).
+      cfg: ``core.recon.ReconConfig`` (fuse + precision drive the model).
+      topology: ``dist.Topology``; its batch size sets the solve granule.
+      mem_budget: total bytes available for operator + in-flight slabs.
+      n_slices: optional total Y; caps the slab at the whole volume.
+      overlap: double-buffered host staging (2x the slab staging bytes).
+
+    Raises ``ValueError`` when even one granule of slices overflows the
+    budget (the operator alone may already be too large).
+    """
+    from ..core.precision import get_policy
+    from ..kernels.xct_spmm import vmem_bytes
+
+    pol = get_policy(cfg.precision)
+    sb = pol.storage_bytes
+    proj, back = plan.proj, plan.back
+    fixed = proj.hbm_bytes(value_bytes=sb) + back.hbm_bytes(value_bytes=sb)
+    rows_pad, cols_pad = proj.n_rows_pad, proj.n_cols_pad
+    # 3 tomo-space + 3 sino-space f32 CG vectors, + (1 or 2 with the
+    # prefetch double buffer) host staging copies of slab-in + slab-out
+    staging_copies = 2 if overlap else 1
+    per_slice = 4 * (3 + staging_copies) * (rows_pad + cols_pad)
+    granule = max(1, topology.n_batch) * cfg.fuse
+    avail = mem_budget - fixed
+    y_slab = (avail // per_slice // granule) * granule
+    if y_slab < granule:
+        need = fixed + granule * per_slice
+        raise ValueError(
+            f"mem_budget={mem_budget} cannot hold one solve granule of "
+            f"{granule} slices (needs >= {need} bytes: {fixed} operator "
+            f"+ {granule}x{per_slice} working set)"
+        )
+    if n_slices is not None:
+        y_slab = min(y_slab, (n_slices // granule) * granule or granule)
+    hbm = flops = 0.0
+    vmem = 0
+    minis = y_slab // granule  # fused minibatches per batch member
+    for op in (proj, back):
+        h, f = _op_traffic(op, cfg.fuse, sb)
+        hbm += h * minis
+        flops += f * minis
+        _, _, s, r, k = op.inds.shape
+        vmem = max(
+            vmem, vmem_bytes(r, k, op.winmap.shape[-1], cfg.fuse, sb)
+        )
+    return SlabPlan(
+        y_slab=int(y_slab),
+        granule=int(granule),
+        fixed_bytes=int(fixed),
+        per_slice_bytes=int(per_slice),
+        slab_hbm_bytes=hbm,
+        slab_flops=flops,
+        vmem_bytes=int(vmem),
+    )
+
+
+class Prefetcher:
+    """Iterate ``(item, fetch(item))`` with background lookahead.
+
+    One worker thread keeps ``depth`` fetches in flight ahead of the
+    consumer: while the solver owns slab ``i``, slab ``i+1`` streams
+    disk -> host.  ``depth=0`` (or ``enabled=False``) degrades to a
+    plain synchronous loop -- the A/B knob ``bench_stream`` sweeps.
+    Exceptions in the fetch thread re-raise at the consuming ``next()``.
+    """
+
+    def __init__(
+        self,
+        fetch: Callable,
+        items: Sequence | Iterable,
+        *,
+        depth: int = 1,
+        enabled: bool = True,
+    ):
+        self._fetch = fetch
+        self._items = list(items)
+        self._depth = depth if enabled else 0
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        if self._depth <= 0:
+            for it in self._items:
+                yield it, self._fetch(it)
+            return
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            pending = []
+            idx = 0
+            # lookahead is exactly `depth`: pending futures + the one
+            # yielded slab bound resident slabs at depth+1, matching the
+            # staging copies suggest_slab budgets for
+            while idx < len(self._items) and len(pending) < self._depth:
+                pending.append(
+                    (self._items[idx],
+                     pool.submit(self._fetch, self._items[idx]))
+                )
+                idx += 1
+            while pending:
+                item, fut = pending.pop(0)
+                out = fut.result()  # re-raises fetch errors here
+                if idx < len(self._items):
+                    pending.append(
+                        (self._items[idx],
+                         pool.submit(self._fetch, self._items[idx]))
+                    )
+                    idx += 1
+                yield item, out

@@ -244,3 +244,19 @@ def test_xct_analytic_fused_staging_eliminates_hbm_term(small_plan):
     ai_fused = fused["flops_dev"] / fused["hbm_dev"]
     ai_gather = gather["flops_dev"] / gather["hbm_dev"]
     assert ai_fused > ai_gather
+
+
+def test_socket_sweep_picks_socket_aware_layout():
+    """ROADMAP open item closed: the dry-run sweep comparing
+    PartitionConfig(socket=1) vs socket=fast at xct-brain scale must
+    pick the socket-aware layout (consecutive Hilbert chunks per socket
+    shrink the hier-sparse merged band), which is what
+    core.partition.default_socket now hands every driver."""
+    from repro.core.partition import default_socket
+    from repro.launch.dryrun import socket_sweep
+
+    sw = socket_sweep()
+    fast = sw["fast"]
+    assert sw[f"socket={fast}"]["dci"] < sw["socket=1"]["dci"]
+    assert sw[f"socket={fast}"]["ici"] < sw["socket=1"]["ici"]
+    assert sw["winner"] == fast == default_socket(sw["p_data"], fast)

@@ -4,7 +4,9 @@ import pytest
 
 from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import (
-    PartitionConfig, build_plan, build_sparse_exchange, estimate_plan,
+    PartitionConfig, build_hier_sparse_exchange, build_plan,
+    build_sparse_exchange, default_socket, estimate_hier_sparse,
+    estimate_plan,
 )
 
 
@@ -149,6 +151,62 @@ def test_socket_layout_requires_divisibility():
 
     with pytest.raises(ValueError):
         socket_chunk_layout(4, 3)
+
+
+@pytest.mark.parametrize(
+    "n,angles,p,g", [(32, 24, 4, 2), (64, 48, 8, 4)]
+)
+def test_estimate_hier_sparse_adjacent_calibrated(n, angles, p, g):
+    """ROADMAP item: the hier-sparse estimate assumed socket members'
+    footprints were independent draws, overstating W for socket-aware
+    plans.  The adjacent-chunk model (union ~ one merged subdomain's
+    sqrt-law footprint, constant 1.9 calibrated like estimate_plan's)
+    must cover the measured W without gross oversizing."""
+    geo = XCTGeometry(n=n, n_angles=angles)
+    a = build_system_matrix(geo)
+    cfg = PartitionConfig(
+        n_data=p, tile=4, rows_per_block=16, nnz_per_stage=16, socket=g
+    )
+    plan = build_plan(geo, cfg, a=a)
+    est = estimate_plan(geo, cfg)
+    n_slow = p // g
+    for name in ("proj", "back"):
+        real_op = getattr(plan, name)
+        _, _, _, w_real, _ = build_hier_sparse_exchange(real_op, g)
+        # est_socket attached by estimate_plan selects the model
+        w_est, _ = estimate_hier_sparse(getattr(est, name), g, n_slow)
+        assert 0.9 <= w_est / w_real <= 1.6, (name, w_est, w_real)
+
+
+def test_estimate_hier_sparse_adjacent_tighter_at_scale():
+    """At xct-brain scale the adjacent-chunk union is strictly below the
+    independent-draw union (the overstatement the ROADMAP flagged)."""
+    geo = XCTGeometry(n=11008, n_angles=4096)
+    base = dict(n_data=512, tile=32, rows_per_block=64, nnz_per_stage=64)
+    legacy = estimate_plan(geo, PartitionConfig(**base, socket=1))
+    aware = estimate_plan(geo, PartitionConfig(**base, socket=16))
+    for name in ("proj", "back"):
+        w_ind, v2_ind = estimate_hier_sparse(
+            getattr(legacy, name), 16, 32
+        )
+        w_adj, v2_adj = estimate_hier_sparse(
+            getattr(aware, name), 16, 32
+        )
+        assert w_adj < w_ind, name
+        assert v2_adj <= v2_ind, name
+        # explicit override matches the inferred selection
+        assert w_adj == estimate_hier_sparse(
+            getattr(legacy, name), 16, 32, socket_aware=True
+        )[0]
+
+
+def test_default_socket_prefers_socket_aware():
+    """The dry-run sweep's winner: socket=fast whenever it divides."""
+    assert default_socket(512, 16) == 16
+    assert default_socket(256, 16) == 16
+    assert default_socket(4, 4) == 4
+    assert default_socket(510, 16) == 1  # not divisible -> legacy
+    assert default_socket(8, 1) == 1  # no fast level
 
 
 def test_hbm_bytes_counts_resident_operator_only(small_system):

@@ -1,0 +1,256 @@
+"""Out-of-core streaming: store integrity, slab parity, budget, resume.
+
+Acceptance pins (ISSUE 4):
+  * a streaming solve under a budget smaller than the full
+    sinogram+volume working set completes and matches the in-memory
+    ``Reconstructor.reconstruct`` slice for slice;
+  * a run killed after slab k and restarted skips the finished slabs
+    and produces a volume *identical* to an uninterrupted run.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.recon import ReconConfig, Reconstructor
+from repro.data.phantom import phantom_slices, simulate_measurements
+from repro.stream import (
+    Prefetcher,
+    SlabStore,
+    reconstruct_streaming,
+    simulate_to_store,
+    suggest_slab,
+)
+
+Y = 8  # slices in the streaming fixtures (multiple of fuse=2)
+
+
+@pytest.fixture(scope="module")
+def rec(small_system):
+    _, _, plan = small_system
+    return Reconstructor(
+        plan, cfg=ReconConfig(precision="single", comm_mode="rs", fuse=2)
+    )
+
+
+@pytest.fixture(scope="module")
+def sino8(small_system):
+    geo, a, _ = small_system
+    x = phantom_slices(geo.n, Y, seed=5)
+    return simulate_measurements(a, x, noise=0.01, seed=5)
+
+
+@pytest.fixture()
+def sino_store(small_system, sino8, tmp_path):
+    geo, a, _ = small_system
+    store = SlabStore.create(str(tmp_path / "sino"), geo.n_rays, Y, 2)
+    simulate_to_store(a, geo.n, store, noise=0.01, seed=5)
+    return store
+
+
+# --------------------------------------------------------------------- #
+# store
+# --------------------------------------------------------------------- #
+def test_slab_store_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal((13, 10)).astype(np.float32)
+    store = SlabStore.from_array(str(tmp_path / "s"), arr, slab=3)
+    assert store.slabs() == [(0, 3), (3, 6), (6, 9), (9, 10)]
+    assert store.complete()
+    np.testing.assert_array_equal(store.to_array(), arr)
+    # cross-shard range read
+    np.testing.assert_array_equal(store.read(2, 8), arr[:, 2:8])
+    # reopen sees the same manifest + data
+    again = SlabStore.open(str(tmp_path / "s"))
+    np.testing.assert_array_equal(again.read(9, 10), arr[:, 9:])
+
+
+def test_slab_store_guards(tmp_path):
+    store = SlabStore.create(str(tmp_path / "s"), 4, 8, 4)
+    with pytest.raises(ValueError):  # unaligned start
+        store.write(2, np.zeros((4, 4), np.float32))
+    with pytest.raises(ValueError):  # wrong shape
+        store.write(0, np.zeros((4, 3), np.float32))
+    with pytest.raises(FileNotFoundError):  # unwritten slab
+        store.read(0, 4)
+    assert not store.complete()
+    with pytest.raises(ValueError):  # conflicting re-create
+        SlabStore.create(str(tmp_path / "s"), 4, 8, 2)
+
+
+def test_simulate_to_store_matches_oneshot(small_system, sino_store,
+                                           sino8):
+    """Slab-by-slab simulation == one-shot, bit for bit (chunk-invariant
+    noise streams + slab-ranged phantoms)."""
+    np.testing.assert_array_equal(sino_store.to_array(), sino8)
+
+
+def test_phantom_slab_range_invariant():
+    full = phantom_slices(16, 6, seed=2)
+    parts = [
+        phantom_slices(16, 6, seed=2, start=j, stop=min(j + 4, 6))
+        for j in (0, 4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1), full)
+
+
+def test_simulate_chunk_kwarg_invariant(small_system):
+    geo, a, _ = small_system
+    x = phantom_slices(geo.n, 6, seed=1)
+    y1 = simulate_measurements(a, x, noise=0.05, seed=1, chunk=1)
+    y64 = simulate_measurements(a, x, noise=0.05, seed=1, chunk=64)
+    np.testing.assert_array_equal(y1, y64)
+
+
+# --------------------------------------------------------------------- #
+# scheduler
+# --------------------------------------------------------------------- #
+def test_suggest_slab_formula_and_guard(small_system, rec):
+    _, _, plan = small_system
+    topo = rec.topology
+    sp = suggest_slab(plan, rec.cfg, topo, 2_000_000, n_slices=Y)
+    assert sp.granule == 2 and sp.y_slab % 2 == 0
+    assert sp.slab_bytes <= 2_000_000
+    per = 4 * 5 * (plan.proj.n_rows_pad + plan.proj.n_cols_pad)
+    assert sp.per_slice_bytes == per
+    with pytest.raises(ValueError):  # operator alone overflows
+        suggest_slab(plan, rec.cfg, topo, sp.fixed_bytes)
+    sync = suggest_slab(
+        plan, rec.cfg, topo, 2_000_000, n_slices=Y, overlap=False
+    )
+    assert sync.per_slice_bytes < sp.per_slice_bytes  # one staging copy
+
+
+def test_prefetcher_orders_and_propagates_errors():
+    seen = []
+
+    def fetch(i):
+        seen.append(i)
+        if i == 3:
+            raise RuntimeError("boom")
+        return i * 10
+
+    items = [0, 1, 2]
+    out = list(Prefetcher(fetch, items, depth=1))
+    assert out == [(0, 0), (1, 10), (2, 20)]
+    with pytest.raises(RuntimeError, match="boom"):
+        list(Prefetcher(fetch, [3], depth=1))
+    # disabled -> plain synchronous order
+    assert list(Prefetcher(lambda i: i, [5, 6], enabled=False)) == [
+        (5, 5), (6, 6),
+    ]
+
+
+# --------------------------------------------------------------------- #
+# driver: parity, budget, resume
+# --------------------------------------------------------------------- #
+def test_streaming_matches_in_memory_slicewise(
+    rec, sino_store, sino8, tmp_path
+):
+    """Pinned parity: each streamed slab is BIT-identical to the
+    in-memory ``Reconstructor.reconstruct`` of that slab, and the
+    assembled volume tracks the full-Y in-memory solve (which XLA may
+    reassociate per compile shape) to well under the phantom scale."""
+    res = reconstruct_streaming(
+        rec, sino_store, str(tmp_path / "vol"), iters=8, y_slab=4
+    )
+    assert res.complete and res.solved == [0, 4]
+    for j0, j1 in res.volume.slabs():
+        x_mem, r_mem = rec.reconstruct(sino8[:, j0:j1], iters=8)
+        np.testing.assert_array_equal(res.volume.read(j0, j1), x_mem)
+        np.testing.assert_array_equal(res.resnorms[:, j0:j1], r_mem)
+    x_full, _ = rec.reconstruct(sino8, iters=8)
+    num = np.linalg.norm(res.volume.to_array() - x_full, axis=0)
+    den = np.linalg.norm(x_full, axis=0)
+    assert (num / den).max() < 1e-2
+
+
+def test_streaming_budget_smaller_than_volume_completes(
+    rec, small_system, sino_store, sino8, tmp_path
+):
+    """Acceptance: a budget that cannot hold the full sinogram+volume
+    working set still completes, in several slabs, matching in-memory."""
+    _, _, plan = small_system
+    sp = suggest_slab(plan, rec.cfg, rec.topology, 1 << 40)
+    full_need = sp.fixed_bytes + Y * sp.per_slice_bytes
+    budget = sp.fixed_bytes + (Y // 2) * sp.per_slice_bytes
+    assert budget < full_need
+    res = reconstruct_streaming(
+        rec, sino_store, str(tmp_path / "vol"), iters=6,
+        mem_budget=budget,
+    )
+    assert res.complete and len(res.solved) >= 2
+    assert res.y_slab * res.volume.rows  # sanity
+    for j0, j1 in res.volume.slabs():
+        x_mem, _ = rec.reconstruct(sino8[:, j0:j1], iters=6)
+        np.testing.assert_array_equal(res.volume.read(j0, j1), x_mem)
+
+
+def test_streaming_resume_skips_and_matches(rec, sino_store, tmp_path):
+    """Acceptance: killed after slab k + restarted == uninterrupted,
+    identically, with the finished slabs skipped (not re-solved)."""
+    base = reconstruct_streaming(
+        rec, sino_store, str(tmp_path / "v0"), iters=6, y_slab=2
+    )
+    ck = str(tmp_path / "ck")
+    part = reconstruct_streaming(
+        rec, sino_store, str(tmp_path / "v1"), iters=6, y_slab=2,
+        ckpt_dir=ck, checkpoint_every=1, max_slabs=2,
+    )
+    assert part.solved == [0, 2] and not part.complete
+    rest = reconstruct_streaming(
+        rec, sino_store, str(tmp_path / "v1"), iters=6, y_slab=2,
+        ckpt_dir=ck,
+    )
+    assert rest.skipped == [0, 2]  # finished slabs not re-solved
+    assert rest.solved == [4, 6] and rest.complete
+    np.testing.assert_array_equal(
+        rest.volume.to_array(), base.volume.to_array()
+    )
+    np.testing.assert_array_equal(rest.resnorms, base.resnorms)
+    # guards: mismatched slab size on resume is an error -- from the
+    # volume store's manifest (same out dir) or the ckpt manifest
+    # (fresh out dir, stale ckpt_dir)
+    with pytest.raises(ValueError, match="manifest"):
+        reconstruct_streaming(
+            rec, sino_store, str(tmp_path / "v1"), iters=6, y_slab=4,
+            ckpt_dir=ck,
+        )
+    with pytest.raises(ValueError, match="y_slab|checkpoint"):
+        reconstruct_streaming(
+            rec, sino_store, str(tmp_path / "v2"), iters=6, y_slab=4,
+            ckpt_dir=ck,
+        )
+
+
+def test_streaming_overlap_is_pure_schedule(rec, sino_store, tmp_path):
+    """Prefetching must not change results (same discipline as the
+    Fig. 8 overlap test)."""
+    a = reconstruct_streaming(
+        rec, sino_store, str(tmp_path / "a"), iters=5, y_slab=4,
+        overlap=False,
+    )
+    b = reconstruct_streaming(
+        rec, sino_store, str(tmp_path / "b"), iters=5, y_slab=4,
+        overlap=True,
+    )
+    np.testing.assert_array_equal(
+        a.volume.to_array(), b.volume.to_array()
+    )
+
+
+def test_streaming_guards(rec, sino_store, tmp_path):
+    with pytest.raises(ValueError, match="exactly one"):
+        reconstruct_streaming(
+            rec, sino_store, str(tmp_path / "v"), iters=2
+        )
+    with pytest.raises(ValueError, match="multiple"):
+        reconstruct_streaming(
+            rec, sino_store, str(tmp_path / "v"), iters=2, y_slab=3
+        )
+    bad = SlabStore.create(str(tmp_path / "bad"), 7, Y, 2)
+    with pytest.raises(ValueError, match="rows"):
+        reconstruct_streaming(
+            rec, bad, str(tmp_path / "v"), iters=2, y_slab=2
+        )
+    assert os.path.isdir(sino_store.directory)
