@@ -1,16 +1,22 @@
 """Paper Fig. 9: XCT-optimized SpMM speedup + roofline vs fusing factor.
 
 Sweeps the minibatch (slice-fusing) size F across precision policies on a
-real blocked-ELL shard, for both staging paths: ``fused`` (the kernel
-streams each stage's window HBM -> VMEM itself, paper Listing 1) and the
-legacy ``gather`` baseline (XLA gather materializes the window tensor in
-HBM first -- one extra full pass over the staged data).  CPU wall time
-measures the *relative* effect of fusing (operator elements amortized
-over F slices -- the paper's register reuse); the derived column reports
-arithmetic intensity and the projected TPU-roofline GFLOP/s per chip
-(min of compute and memory-bound bounds), both straight from the shared
-traffic model ``repro.kernels.traffic.spmm_traffic`` -- the fused rows
-show the staging HBM term eliminated (strictly higher AI at every F).
+real blocked-ELL shard, for the staging x DMA A/B ladder: ``fused`` (the
+kernel streams each stage's window HBM -> VMEM itself with run-length
+*coalesced* copies -- the production path), ``fused-perrow`` (same
+kernel, one copy per window row -- the DMA-issue baseline the coalescing
+refactor beats) and the legacy ``gather`` baseline (XLA gather
+materializes the window tensor in HBM first -- one extra full pass over
+the staged data).  CPU wall time measures the *relative* effect of
+fusing (operator elements amortized over F slices -- the paper's
+register reuse); the derived column reports arithmetic intensity, the
+projected TPU-roofline GFLOP/s per chip, and the modeled DMA issue
+count, all straight from the shared traffic model
+``repro.kernels.traffic.spmm_traffic``.  The fused rows also carry the
+*measured* segments-per-stage statistics of the shard's real winmap
+(``ops.winmap_segments``): mean segments per stage and the copy-length
+histogram, so the JSON artifact records how long the Hilbert runs
+actually are.
 """
 from __future__ import annotations
 
@@ -20,7 +26,7 @@ import numpy as np
 
 from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import PartitionConfig, build_plan
-from repro.kernels.ops import apply_operator
+from repro.kernels.ops import apply_operator, segment_histogram
 from repro.kernels.traffic import spmm_traffic
 
 from .common import emit, timeit
@@ -29,7 +35,21 @@ PEAK = 197e12
 HBM = 819e9
 
 
-def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False):
+def _seg_stats(op):
+    """Measured segments-per-stage mean + length histogram of a shard."""
+    segs = op.winsegs[0]  # [B, S, NSEG, 3] of device 0
+    per_stage = (segs[..., 2] > 0).sum(axis=-1)  # [B, S]
+    hist = segment_histogram(segs)
+    # leading "L" keeps benchmarks.common._parse_derived from mangling
+    # the token into a float
+    hist_tok = "|".join(
+        f"L{ln}:{ct}" for ln, ct in sorted(hist.items())
+    )
+    return float(per_stage.mean()), hist_tok
+
+
+def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
+        ab: bool = True):
     geo = XCTGeometry(n=n, n_angles=n // 2)
     a = build_system_matrix(geo)
     plan = build_plan(
@@ -42,6 +62,8 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False):
     inds = jnp.asarray(op.inds[0])
     vals = jnp.asarray(op.vals[0])
     winmap = jnp.asarray(op.winmap[0])
+    winsegs = jnp.asarray(op.winsegs[0])
+    segs_mean, segs_hist = _seg_stats(op)
     _, b, s, r, k = op.inds.shape
     buf = op.winmap.shape[-1]
     rng = np.random.default_rng(0)
@@ -58,39 +80,64 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False):
             ("mixed", jnp.float16),
         ]
     )
+    # the A/B ladder: (row tag, staging, dma)
+    paths = [("fused", "fused", "coalesced")]
+    if ab:
+        paths += [
+            ("fused-perrow", "fused", "per_row"),
+            ("gather", "gather", "coalesced"),
+        ]
     for prec, sdt in policies:
         cdt = jnp.float16 if prec == "half" else jnp.float32
         for f in fusings:
             x = jnp.asarray(
                 rng.normal(size=(op.cols_per_dev, f)).astype(np.float32)
             )
-            for staging in ("fused", "gather"):
+            for tag, staging, dma in paths:
                 fn = jax.jit(
-                    lambda xx, i=inds, v=vals, w=winmap, sd=sdt,
-                    cd=cdt, st=staging:
+                    lambda xx, i=inds, v=vals, w=winmap, sg=winsegs,
+                    sd=sdt, cd=cdt, st=staging, dm=dma:
                     apply_operator(i, v, w, xx, storage_dtype=sd,
-                                   compute_dtype=cd, staging=st)
+                                   compute_dtype=cd, staging=st,
+                                   dma=dm, winsegs=sg)
                 )
                 t = timeit(fn, x, reps=3 if not quick else 1)
                 tr = spmm_traffic(
                     b, s, r, k, buf, f,
                     storage_bytes=jnp.dtype(sdt).itemsize,
-                    staging=staging,
+                    staging=staging, dma=dma,
+                    segments_per_stage=segs_mean,
                 )
                 flops = tr["flops"]
                 if base_t is None:
                     base_t = t / flops  # s/flop at the F=1 baseline
                 ai = tr["intensity"]
                 tpu_gflops = min(PEAK, ai * HBM) / 1e9
+                extra = ""
+                if staging == "fused":
+                    extra = (
+                        f" dma_issues={tr['dma_issues']:.0f}"
+                        f" segs_mean={segs_mean:.1f}"
+                        f" seg_hist={segs_hist}"
+                    )
                 emit(
-                    f"spmm_fusing/{prec}/{staging}/F={f}",
+                    f"spmm_fusing/{prec}/{tag}/F={f}",
                     t * 1e6,
                     # throughput speedup per unit work (Fig. 9a metric)
                     f"speedup={base_t / (t / flops):.2f}x "
                     f"ai={ai:.2f}flop/B "
-                    f"roofline={tpu_gflops:.0f}GF/s",
+                    f"roofline={tpu_gflops:.0f}GF/s" + extra,
                 )
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--no-ab", dest="ab", action="store_false",
+        help="skip the per-row / gather baseline arms",
+    )
+    args = ap.parse_args()
+    run(quick=args.quick, ab=args.ab)

@@ -1,12 +1,21 @@
 """Out-of-core streaming throughput: slices/s vs slab size x overlap.
 
-One row per (Y_slab, prefetch-overlap) cell: the whole sinogram lives in
-an on-disk ``repro.stream.SlabStore``, the drain runs budget-shaped slabs
-through the solver, and the derived fields carry slices/s plus the
-modeled per-slab HBM traffic and arithmetic intensity from
+One row per (Y_slab, pipeline mode) cell, sweeping the staging ladder
+A/B: ``sync`` (no prefetch, upload on the critical path), ``overlap``
+(disk -> host prefetch only, upload still synchronous) and
+``overlap_dev`` (prefetch + device-upload double-buffering: slab
+``i+1``'s ``jax.device_put`` runs in the prefetch thread while slab
+``i`` solves -- the default production schedule).  The whole sinogram
+lives in an on-disk ``repro.stream.SlabStore``; the drain runs
+budget-shaped slabs through the solver.  Derived fields carry slices/s,
+the modeled per-slab HBM traffic and arithmetic intensity from
 ``stream.scheduler.suggest_slab`` (same ``kernels.traffic`` formula the
-roofline sweeps use).  Emits ``BENCH_stream.json`` via
-``benchmarks.common.emit`` (CI's bench-smoke job uploads it).
+roofline sweeps use), and the measured per-slab load/upload/solve split
+-- ``upload_hidden=1`` marks rows whose uploads ran off the critical
+path, so the JSON artifact shows upload time hidden under solve time in
+the overlapped mode.  Emits ``BENCH_stream.json`` via
+``benchmarks.common.emit`` (CI's bench-smoke job uploads it and
+``tools/bench_check.py`` guards it against regressions).
 """
 from __future__ import annotations
 
@@ -16,6 +25,8 @@ import time
 
 import os
 
+import numpy as np
+
 from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import PartitionConfig, build_plan
 from repro.core.recon import ReconConfig, Reconstructor
@@ -24,8 +35,16 @@ from repro.stream.scheduler import SlabPlan, suggest_slab  # noqa: F401
 
 from .common import emit
 
+# tag -> (overlap, device_upload)
+MODES = {
+    "sync": (False, "sync"),
+    "overlap": (True, "sync"),
+    "overlap_dev": (True, "overlap"),
+}
 
-def run(n: int = 48, iters: int = 6, quick: bool = False):
+
+def run(n: int = 48, iters: int = 6, quick: bool = False,
+        ab: bool = True):
     if quick:
         n, iters = 32, 4
     y_total = 8 if quick else 16
@@ -41,6 +60,7 @@ def run(n: int = 48, iters: int = 6, quick: bool = False):
     rec = Reconstructor(plan, cfg=cfg)
     granule = rec.n_batch * cfg.fuse
     workdir = tempfile.mkdtemp(prefix="bench_stream_")
+    modes = MODES if ab else {"overlap_dev": MODES["overlap_dev"]}
     try:
         sino = SlabStore.create(
             os.path.join(workdir, "sino"), geo.n_rays, y_total, granule
@@ -48,17 +68,17 @@ def run(n: int = 48, iters: int = 6, quick: bool = False):
         simulate_to_store(a, n, sino, noise=0.0, seed=0)
         slabs = sorted({granule, y_total // 2, y_total})
         for y_slab in slabs:
-            for overlap in (False, True):
-                tag = "overlap" if overlap else "sync"
+            for tag, (overlap, upload) in modes.items():
                 out = os.path.join(workdir, f"vol_{y_slab}_{tag}")
                 # rep 0 is warmup (compiles the slab shape), not timed
                 ts = []
+                res = None
                 for rep in range(2 if quick else 3):
                     shutil.rmtree(out, ignore_errors=True)
                     t0 = time.perf_counter()
-                    reconstruct_streaming(
+                    res = reconstruct_streaming(
                         rec, sino, out, iters=iters, y_slab=y_slab,
-                        overlap=overlap,
+                        overlap=overlap, device_upload=upload,
                     )
                     if rep:
                         ts.append(time.perf_counter() - t0)
@@ -70,17 +90,32 @@ def run(n: int = 48, iters: int = 6, quick: bool = False):
                     1 << 40, n_slices=y_slab, overlap=overlap,
                 )
                 ai = sp.slab_flops / max(sp.slab_hbm_bytes, 1.0)
+                up_ms = 1e3 * float(np.mean(res.upload_seconds))
+                solve_ms = 1e3 * float(np.mean(res.solve_seconds))
+                load_ms = 1e3 * float(np.mean(res.load_seconds))
                 emit(
                     f"stream/slab{y_slab}/{tag}",
                     t * 1e6,
                     f"slices_per_s={y_total / t:.2f} y_slab={y_slab} "
                     f"slabs={-(-y_total // y_slab)} iters={iters} "
                     f"ai={ai:.3f}flop/B "
-                    f"slab_hbm_mb={sp.slab_hbm_bytes / 2**20:.1f}",
+                    f"slab_hbm_mb={sp.slab_hbm_bytes / 2**20:.1f} "
+                    f"load_ms={load_ms:.1f} upload_ms={up_ms:.1f} "
+                    f"solve_ms={solve_ms:.1f} "
+                    f"upload_hidden={int(res.upload_overlapped)}",
                 )
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--no-ab", dest="ab", action="store_false",
+        help="run only the production overlap_dev schedule",
+    )
+    args = ap.parse_args()
+    run(quick=args.quick, ab=args.ab)

@@ -93,6 +93,13 @@ class OperatorShards:
                                   SMEM by the fused kernel, which DMAs the
                                   named rows HBM -> VMEM itself -- no
                                   staged window tensor exists in HBM)
+      winsegs    [P, B, S, NSEG, 3]  run-length DMA segments
+                                  ``{src_start, dst_start, len}`` from
+                                  ``kernels.ops.winmap_segments``: the
+                                  Hilbert ordering keeps source runs
+                                  long, so the fused kernel's default
+                                  coalesced path issues one strided copy
+                                  per segment instead of one per row
       row_map    [P, B, R]        global (padded) output row of each
                                   virtual row; padding points at
                                   ``n_rows_pad`` (dropped by the scatter);
@@ -112,6 +119,7 @@ class OperatorShards:
     rows_per_dev: int  # output ownership chunk
     cols_per_dev: int  # input ownership chunk
     nnz: int  # true nnz across devices (before padding)
+    winsegs: np.ndarray | None = None  # [P, B, S, NSEG, 3] DMA segments
 
     @property
     def flat_rows(self) -> int:
@@ -132,8 +140,9 @@ class OperatorShards:
         and the fused kernel never allocates it at all (its staging is
         the O(VMEM) double buffer, see ``kernels.xct_spmm.vmem_bytes``).
         """
+        segs = 0 if self.winsegs is None else self.winsegs.size
         return self.padded_nnz * (value_bytes + index_bytes) + (
-            self.winmap.size * 4 + self.row_map.size * 4
+            self.winmap.size * 4 + self.row_map.size * 4 + segs * 4
         )
 
 
@@ -312,6 +321,8 @@ def _build_operator(
         vrows = (uv // np.int64(n_rows + 1)).astype(np.int32)
         row_map[p].reshape(-1)[: vrows.size] = vrows
 
+    from ..kernels.ops import winmap_segments
+
     return OperatorShards(
         inds=inds,
         vals=vals,
@@ -323,6 +334,9 @@ def _build_operator(
         rows_per_dev=rows_per_dev,
         cols_per_dev=cols_per_dev,
         nnz=nnz,
+        # run-length coalesced DMA plan for the fused kernel's default
+        # path: one strided copy per segment (ops.winmap_segments)
+        winsegs=winmap_segments(winmap),
     )
 
 
@@ -397,6 +411,8 @@ def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
     sqrt_p = math.sqrt(P)
 
     def one(n_rows, n_cols, rows_per_dev, cols_per_dev):
+        from ..kernels.traffic import est_segments_per_stage
+
         foot = min(n_rows, int(1.8 * n_rows / sqrt_p) + R)
         mean_nnz = nnz_total / P / max(foot, 1)
         s = max(1, int(math.ceil(1.35 * mean_nnz / K)))
@@ -405,12 +421,14 @@ def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
         vrows = int(1.2 * max(foot, nnz_total / P / (s * K)))
         b = _pad_to(max(1, int(math.ceil(vrows / R))), 8)
         buf = _pad_to(min(6 * (R + K), R * K), 8)
+        nseg = _pad_to(est_segments_per_stage(buf), 8)
         v = _pad_to(max(8, int(2.5 * vrows / P)), 8)
         sds = _jax.ShapeDtypeStruct
         op = OperatorShards(
             inds=sds((P, b, s, R, K), np.int16),
             vals=sds((P, b, s, R, K), np.float32),
             winmap=sds((P, b, s, buf), np.int32),
+            winsegs=sds((P, b, s, nseg, 3), np.int32),
             row_map=sds((P, b, R), np.int32),
             foot_rows=None,
             n_rows_pad=rows_per_dev * P,

@@ -27,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..dist import Topology
 from ..dist.collectives import sparse_exchange
-from ..kernels.ops import apply_operator
+from ..kernels.ops import apply_operator, winmap_segments
 from .hilbert import hilbert_argsort  # noqa: F401  (re-export convenience)
 from .partition import (
     Plan,
@@ -39,7 +39,25 @@ from .pipeline import pipelined_apply
 from .precision import adaptive_scale_cols, get_policy, qcast
 from .solver import cgnr
 
-__all__ = ["ReconConfig", "Reconstructor"]
+__all__ = ["ReconConfig", "Reconstructor", "StagedSlab"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedSlab:
+    """A sinogram slab already packed, normalized and on device.
+
+    Produced by :meth:`Reconstructor.stage_sino`; pass it to
+    :meth:`Reconstructor.reconstruct` in place of the natural-order
+    numpy slab to skip the host->device staging inside the solve.  The
+    streaming driver stages slab ``i+1`` from its prefetch thread while
+    slab ``i`` solves (the Fig. 8 overlap applied to the jit argument
+    transfer) -- results are bit-identical either way because the same
+    pack/scale/transfer runs, just earlier.
+    """
+
+    y: object  # [sino_pad, Y] f32 device array, pre-scaled
+    scale: np.ndarray  # [Y] power-of-two per-slice normalization
+    n_slices: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +69,10 @@ class ReconConfig:
     use_ref: bool = False  # oracle instead of Pallas kernel
     interpret: bool | None = None  # Pallas interpret (auto off-TPU)
     staging: str = "fused"  # in-kernel window staging | legacy "gather"
+    dma: str = "coalesced"  # run-length window DMAs | "per_row" A/B
+    # per-call SMEM budget for the kernel's chunked scalar prefetch
+    # (None = kernels.xct_spmm.SMEM_BUDGET)
+    smem_budget: int | None = None
     # [deprecated] only the legacy gather path chunks its staging
     # transient; the fused kernel's staging lives in VMEM.
     blocks_per_call: int | None = None
@@ -220,6 +242,13 @@ class Reconstructor:
                 arrs[f"{name}_inds"] = sds(op.inds.shape, jnp.int16)
                 arrs[f"{name}_vals"] = sds(op.vals.shape, pol.storage)
                 arrs[f"{name}_winmap"] = sds(op.winmap.shape, jnp.int32)
+                segs_shape = (
+                    op.winsegs.shape
+                    if op.winsegs is not None
+                    # older pickled plans: real winmap, no tables yet
+                    else winmap_segments(op.winmap).shape
+                )
+                arrs[f"{name}_winsegs"] = sds(segs_shape, jnp.int32)
                 arrs[f"{name}_row_map"] = sds(
                     op.row_map.shape, jnp.int32
                 )
@@ -240,6 +269,11 @@ class Reconstructor:
             arrs[f"{name}_inds"] = op.inds
             arrs[f"{name}_vals"] = op.vals.astype(pol.storage)
             arrs[f"{name}_winmap"] = op.winmap
+            arrs[f"{name}_winsegs"] = (
+                op.winsegs
+                if op.winsegs is not None
+                else winmap_segments(op.winmap)  # older pickled plans
+            )
             arrs[f"{name}_row_map"] = op.row_map
             if mode == "sparse":
                 send, recv, _ = build_sparse_exchange(op)
@@ -277,6 +311,7 @@ class Reconstructor:
             inds = a[f"{prefix}_inds"][0]
             vals = a[f"{prefix}_vals"][0]
             winmap = a[f"{prefix}_winmap"][0]
+            winsegs = a[f"{prefix}_winsegs"][0]
             row_map = a[f"{prefix}_row_map"][0]
             n_rows_pad = rows_out * math.prod(
                 self.mesh.shape[x] for x in daxes
@@ -293,6 +328,9 @@ class Reconstructor:
                     use_ref=cfg.use_ref,
                     interpret=cfg.interpret,
                     staging=cfg.staging,
+                    dma=cfg.dma,
+                    winsegs=winsegs,
+                    smem_budget=cfg.smem_budget,
                     blocks_per_call=cfg.blocks_per_call,
                 )
 
@@ -375,7 +413,7 @@ class Reconstructor:
     # ------------------------------------------------------------------ #
     def _specs(self):
         d = P(self.data_axes)
-        op_names = ["inds", "vals", "winmap", "row_map"]
+        op_names = ["inds", "vals", "winmap", "winsegs", "row_map"]
         if self.cfg.comm_mode == "sparse":
             op_names += ["send", "recv"]
         elif self.cfg.comm_mode == "hier-sparse":
@@ -459,12 +497,14 @@ class Reconstructor:
         )
         return self.unpack_tomo(out)
 
-    def reconstruct(self, sino_nat, iters: int = 30, x0_nat=None):
-        """CGNR solve; returns ``(x [n_vox, Y], resnorms [iters, Y])``.
+    def stage_sino(self, sino_nat) -> StagedSlab:
+        """Pack + normalize + upload one sinogram slab (host -> device).
 
-        Inputs are adaptively normalized per slice (power-of-two factor
-        steering max|y| to ~256, paper Sec. III-C1) so narrow-precision
-        iterates stay in range; the solution scales back exactly.
+        The host->device half of :meth:`reconstruct`, split out so a
+        prefetch thread can run it for slab ``i+1`` while slab ``i``
+        solves (``stream.driver`` wires this through
+        ``scheduler.Prefetcher``'s ``stage=``).  Blocks until the
+        transfer lands so the caller's timing is honest.
         """
         self._check_slices(sino_nat.shape[1])
         y = self.pack_sino(sino_nat)
@@ -474,11 +514,34 @@ class Reconstructor:
         scale = np.exp2(
             np.round(np.log2(1.0 / np.maximum(m, 1e-30)))
         ).astype(np.float32)
-        y = y * scale
+        _, vec = self._specs()
+        y_dev = jax.device_put(
+            y * scale, jax.sharding.NamedSharding(self.mesh, vec)
+        )
+        jax.block_until_ready(y_dev)
+        return StagedSlab(
+            y=y_dev, scale=scale, n_slices=int(sino_nat.shape[1])
+        )
+
+    def reconstruct(self, sino_nat, iters: int = 30, x0_nat=None):
+        """CGNR solve; returns ``(x [n_vox, Y], resnorms [iters, Y])``.
+
+        Inputs are adaptively normalized per slice (power-of-two factor
+        steering max|y| to ~256, paper Sec. III-C1) so narrow-precision
+        iterates stay in range; the solution scales back exactly.
+        ``sino_nat`` may be a pre-staged :class:`StagedSlab` (see
+        :meth:`stage_sino`); the math is identical either way.
+        """
+        staged = (
+            sino_nat
+            if isinstance(sino_nat, StagedSlab)
+            else self.stage_sino(sino_nat)
+        )
+        scale = staged.scale
         x0 = (
             self.pack_tomo(x0_nat) * scale
             if x0_nat is not None
-            else np.zeros((self.tomo_pad, sino_nat.shape[1]), np.float32)
+            else np.zeros((self.tomo_pad, staged.n_slices), np.float32)
         )
-        x, res = self._get_fn("cg", iters)(self._arrays, y, x0)
+        x, res = self._get_fn("cg", iters)(self._arrays, staged.y, x0)
         return self.unpack_tomo(x) / scale, np.asarray(res) / scale

@@ -1,29 +1,128 @@
-"""jit'd wrappers around the XCT SpMM kernel.
+"""jit'd wrappers around the XCT SpMM kernel + the window-DMA builder.
 
 ``apply_operator`` is the single-device (shard-local) fused
-projection/backprojection.  The default path (``staging="fused"``) hands
-the whole local slab to the Pallas kernel, which streams each stage's
-window from HBM into VMEM itself (the paper's Listing 1 buffer-load
-loop) -- one HBM pass over operator data per minibatch, no staged window
-tensor, no transient-budget chunking.
+projection/backprojection.  The default path (``staging="fused"``,
+``dma="coalesced"``) hands the whole local slab to the Pallas kernel,
+which streams each stage's window from HBM into VMEM itself (the
+paper's Listing 1 buffer-load loop) -- one HBM pass over operator data
+per minibatch, no staged window tensor, no transient-budget chunking --
+and issues one strided copy per *run-length segment* of consecutive
+source rows instead of one per row (``winmap_segments`` below;
+Hilbert-ordered columns make the runs long, so DMA issue overhead is
+amortized like Listing 1 amortizes index loads).
 
 ``staging="gather"`` keeps the legacy two-pass emulation for A/B
 benchmarking: an XLA gather materializes the ``[B, S, BUF, F]`` windows
 in HBM before the kernel runs, bounded by a ~64 MB transient budget
-(chunked over row-blocks with ``lax.scan``).  The oracle equivalent
-lives in ``ref.py``; ``use_ref=True`` swaps it in so every higher layer
-can be validated against pure jnp with one flag.
+(chunked over row-blocks with ``lax.scan``).  ``dma="per_row"`` keeps
+the one-copy-per-window-row fused path for the same purpose.  The
+oracle equivalent lives in ``ref.py``; ``use_ref=True`` swaps it in so
+every higher layer can be validated against pure jnp with one flag.
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .traffic import STAGINGS, staged_window_bytes
+from .traffic import DMA_MODES, STAGINGS, staged_window_bytes
 from .xct_spmm import spmm_block_ell, spmm_block_ell_staged
 
-__all__ = ["apply_operator"]
+__all__ = [
+    "apply_operator",
+    "winmap_segments",
+    "segment_histogram",
+    "dma_issue_count",
+]
+
+
+def winmap_segments(winmap, pad_to: int = 8) -> np.ndarray:
+    """Run-length encode a ``[..., BUF]`` winmap into DMA segments.
+
+    Every maximal run of *consecutive* source rows in a stage's window
+    (``winmap[..., j+1] == winmap[..., j] + 1``) becomes one coalesced
+    copy ``x[src : src+len] -> win[dst : dst+len]``; runs are then split
+    into power-of-two pieces (largest first) because Pallas DMA extents
+    are static -- the kernel unrolls over the possible length classes
+    and issues each piece with one ``pl.when``-guarded copy.  Hilbert
+    ordering (``core.partition``) keeps runs long, so a production
+    stage's window moves in O(NSEG) issues instead of O(BUF).
+
+    Args:
+      winmap: ``[..., BUF]`` int array of device-local input column ids
+        (any leading batch dims; the shards use ``[B, S, BUF]``).
+      pad_to: pad the per-stage segment capacity to a multiple of this.
+
+    Returns:
+      ``[..., NSEG, 3]`` int32: ``{src_start, dst_start, len}`` per
+      segment, ``len`` a power of two; pad slots have ``len == 0`` (the
+      kernel skips them).  NSEG is the max decomposed-segment count over
+      all leading indices, padded to ``pad_to``.
+    """
+    wm = np.asarray(winmap)
+    if wm.ndim < 1:
+        raise ValueError("winmap must have a trailing BUF dimension")
+    lead, buf = wm.shape[:-1], wm.shape[-1]
+    flat = wm.reshape(-1, buf).astype(np.int64)
+    n = flat.shape[0]
+    if n == 0:
+        return np.zeros((*lead, pad_to, 3), np.int32)
+    # fully vectorized (plan builds call this for every shard): run
+    # boundaries, then one fill pass per power-of-two length class
+    isbrk = np.ones((n, buf), bool)
+    if buf > 1:
+        isbrk[:, 1:] = np.diff(flat, axis=1) != 1
+    row_id, st = np.nonzero(isbrk)  # runs, row-major order
+    en = np.empty_like(st)
+    en[:-1] = st[1:]
+    en[-1] = buf
+    en[np.flatnonzero(np.diff(row_id))] = buf  # last run of each row
+    length = en - st
+    src0 = flat[row_id, st]
+    nbits = int(buf).bit_length()
+    counts = np.zeros_like(length)  # popcount = decomposed pieces/run
+    for b in range(nbits):
+        counts += (length >> b) & 1
+    # piece slot = (pieces of prior runs in the row) + (larger pieces
+    # of this run): largest-first order, matching the kernel's classes
+    cum = np.cumsum(counts) - counts
+    firsts = np.concatenate(([0], np.flatnonzero(np.diff(row_id)) + 1))
+    runs_per_row = np.diff(np.append(firsts, row_id.size))
+    run_off = cum - np.repeat(cum[firsts], runs_per_row)
+    totals = np.add.reduceat(counts, firsts)
+    nseg = pad_to * -(-int(totals.max()) // pad_to)
+    out = np.zeros((n, nseg, 3), np.int32)
+    for b in range(nbits):
+        sel = ((length >> b) & 1) == 1
+        if not sel.any():
+            continue
+        ln = length[sel]
+        off = (ln >> (b + 1)) << (b + 1)  # sum of the larger pieces
+        rank = np.zeros_like(ln)
+        for b2 in range(b + 1, nbits):
+            rank += (ln >> b2) & 1
+        slot = run_off[sel] + rank
+        out[row_id[sel], slot, 0] = src0[sel] + off
+        out[row_id[sel], slot, 1] = st[sel] + off
+        out[row_id[sel], slot, 2] = 1 << b
+    return out.reshape(*lead, nseg, 3)
+
+
+def dma_issue_count(winsegs) -> int:
+    """Copies the coalesced kernel issues per window pass: one per
+    non-pad segment (pad slots have ``len == 0``)."""
+    return int((np.asarray(winsegs)[..., 2] > 0).sum())
+
+
+def segment_histogram(winsegs) -> dict:
+    """``{copy_len: count}`` over the non-pad segments of a table --
+    the measured segments-per-stage histogram ``bench_spmm`` reports."""
+    lens = np.asarray(winsegs)[..., 2].ravel()
+    lens = lens[lens > 0]
+    uniq, cnt = np.unique(lens, return_counts=True)
+    return {int(u): int(c) for u, c in zip(uniq, cnt)}
 
 
 def _gather_blocks_per_call(b, s, buf, f, bytes_per, budget=64 << 20):
@@ -56,6 +155,9 @@ def apply_operator(
     use_ref: bool = False,
     interpret: bool | None = None,
     staging: str = "fused",
+    dma: str = "coalesced",
+    winsegs=None,
+    smem_budget: int | None = None,
     blocks_per_call: int | None = None,
 ):
     """Shard-local fused SpMM: returns the fp32 partial rows [B*R, F].
@@ -71,6 +173,14 @@ def apply_operator(
       staging: "fused" (default) stages windows inside the kernel --
         double-buffered HBM->VMEM copies, no intermediate tensor;
         "gather" is the legacy two-pass XLA-gather path (A/B baseline).
+      dma: "coalesced" (default) issues one strided copy per run-length
+        segment of the winmap; "per_row" keeps the one-copy-per-row
+        A/B baseline.  Fused staging only.
+      winsegs: precomputed ``winmap_segments(winmap)``; required when
+        ``winmap`` is a traced value (e.g. inside ``shard_map`` --
+        ``OperatorShards.winsegs`` carries it), computed here otherwise.
+      smem_budget: per-call SMEM budget for the scalar prefetch; the
+        kernel chunks row-blocks to fit (see ``xct_spmm``).
       blocks_per_call: [deprecated -- only the gather path chunks]
         row-blocks per inner scan step; auto-sized when None.
     """
@@ -78,6 +188,8 @@ def apply_operator(
         raise ValueError(
             f"unknown staging {staging!r}; one of {STAGINGS}"
         )
+    if dma not in DMA_MODES:
+        raise ValueError(f"unknown dma {dma!r}; one of {DMA_MODES}")
     vals_s = vals.astype(storage_dtype)
     x_s = x_loc.astype(storage_dtype)
     b, s, r, k = inds.shape
@@ -90,9 +202,20 @@ def apply_operator(
         ).astype(jnp.float32)
 
     if staging == "fused":
+        if dma == "coalesced" and winsegs is None:
+            try:
+                winsegs = winmap_segments(winmap)
+            except jax.errors.TracerArrayConversionError as e:
+                raise ValueError(
+                    "dma='coalesced' under tracing needs precomputed "
+                    "segments: pass winsegs=winmap_segments(winmap) "
+                    "(OperatorShards.winsegs carries them per shard)"
+                ) from e
         out = spmm_block_ell(
             inds, vals_s, winmap, x_s,
             compute_dtype=compute_dtype, interpret=interpret,
+            winsegs=winsegs if dma == "coalesced" else None,
+            smem_budget=smem_budget,
         )
         return out.reshape(b * r, f)
 

@@ -11,7 +11,13 @@ source of truth.
 Per minibatch of ``F`` fused slices, one device's shard moves:
 
   operator     B*S*R*K slots x (2 B index + ``sb`` B value)  -- one pass
-  winmap       B*S*BUF window ids x 4 B
+  descriptors  what the window staging reads to address its copies:
+               B*S*BUF window ids x 4 B (per-row DMA path and the
+               gather baseline's XLA gather), or B*S*NSEG x 12 B
+               ``{src, dst, len}`` segments (coalesced path -- at the
+               measured NSEG ~ 0.62 BUF this is slightly MORE descriptor
+               traffic per window entry, the price of cutting the issue
+               count; both terms are priced honestly)
   window       staging="fused":  B*S*BUF*F*sb  (each window row crosses
                HBM once: DMA'd straight into VMEM by the kernel)
                staging="gather": 2 x B*S*BUF*F*sb  (the XLA gather
@@ -20,25 +26,65 @@ Per minibatch of ``F`` fused slices, one device's shard moves:
   band out     B*R*F x 4 B fp32, written by the kernel and read by the
                reduction scatter
 
+Bytes alone do not price the buffer-load loop: every issued copy also
+pays a fixed descriptor/issue overhead, which is why the kernel
+coalesces run-length segments (one strided copy per run) instead of
+copying row by row.  ``dma_issues`` counts the copies and
+:func:`dma_issue_seconds` prices the whole transfer as
+
+    t = issues * per_copy_overhead + bytes / bandwidth
+
 Doctest -- the fused path strictly raises arithmetic intensity (the
-acceptance criterion of the in-kernel-staging refactor):
+acceptance criterion of the in-kernel-staging refactor; both at
+``dma="per_row"`` so the descriptor terms match):
 
 >>> g = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2,
-...                  staging="gather")
+...                  staging="gather", dma="per_row")
 >>> u = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2,
-...                  staging="fused")
+...                  staging="fused", dma="per_row")
 >>> u["hbm_bytes"] < g["hbm_bytes"]
 True
 >>> u["intensity"] > g["intensity"]
 True
 >>> g["hbm_bytes"] - u["hbm_bytes"] == g["window_bytes"] // 2
 True
+
+and coalescing strictly drops the modeled issue count (the acceptance
+criterion of the coalesced-DMA refactor) while paying a little more
+descriptor traffic:
+
+>>> c = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2)
+>>> c["dma_issues"] < u["dma_issues"]
+True
+>>> u["dma_issues"] == 8 * 2 * 768.0
+True
+>>> c["winmap_bytes"] == 8 * 2 * est_segments_per_stage(768) * 12.0
+True
 """
 from __future__ import annotations
 
-__all__ = ["spmm_traffic", "staged_window_bytes"]
+import math
+
+__all__ = [
+    "spmm_traffic",
+    "staged_window_bytes",
+    "dma_issue_seconds",
+    "est_segments_per_stage",
+    "op_segments_per_stage",
+    "DMA_MODES",
+    "PER_COPY_OVERHEAD_S",
+]
 
 STAGINGS = ("fused", "gather")
+DMA_MODES = ("coalesced", "per_row")
+
+# Fixed cost of issuing one async copy (descriptor setup + DMA engine
+# dispatch).  A model parameter, O(100 ns) class on current parts -- the
+# same order as the CUDA per-load index overhead Listing 1's buffer-load
+# loop amortizes.  At F=16 a per-row window copy moves only ~32 B, so
+# the staging loop is issue-bound at ANY plausible overhead; the sweeps
+# expose exactly that (and what run-length coalescing claws back).
+PER_COPY_OVERHEAD_S = 1e-7
 
 
 def staged_window_bytes(s: int, buf: int, f: int,
@@ -52,6 +98,60 @@ def staged_window_bytes(s: int, buf: int, f: int,
     return s * buf * f * storage_bytes
 
 
+def est_segments_per_stage(buf: int) -> int:
+    """Analytic decomposed-segment count for one stage's window.
+
+    For abstract plans (``estimate_plan``) no winmap exists to run-length
+    encode, so the sweeps need a model.  A stage's window is the sorted
+    unique set of input columns its R x K slots touch; Hilbert ordering
+    keeps those columns *clustered* but a stage samples them strided
+    (slot position, not curve position), so runs stay short -- measured
+    mean decomposed-segment counts on real plans are 0.40-0.75 x BUF
+    (``ops.winmap_segments`` over built plans at n in [32, 64];
+    est/real in [0.5, 2] pinned by ``tests/test_kernel_spmm.py::
+    test_est_segments_calibrated``).  The model uses the measured
+    mid-band 0.62 x BUF: a strict, but honest, drop from the one-per-row
+    baseline.
+    """
+    return int(min(buf, max(1, math.ceil(0.62 * buf))))
+
+
+def op_segments_per_stage(op) -> float | None:
+    """Segments-per-stage of an operator shard, for the issue model.
+
+    Real shards carry ``winsegs`` tables (``ops.winmap_segments``): the
+    *measured mean* non-pad segment count per stage.  Abstract shards
+    (``estimate_plan``) carry only the table shape: its capacity, which
+    came from :func:`est_segments_per_stage`.  Returns ``None`` when the
+    operator predates the tables (falls back to the analytic model).
+    """
+    ws = getattr(op, "winsegs", None)
+    if ws is None:
+        return None
+    try:
+        import numpy as _np
+
+        arr = _np.asarray(ws)
+    except TypeError:  # ShapeDtypeStruct and friends
+        return float(ws.shape[-2])
+    if arr.dtype == object or arr.ndim < 2:
+        return float(ws.shape[-2])
+    return float((arr[..., 2] > 0).sum(axis=-1).mean())
+
+
+def dma_issue_seconds(
+    issues: float,
+    bytes_: float,
+    bandwidth: float,
+    per_copy_overhead: float = PER_COPY_OVERHEAD_S,
+) -> float:
+    """Seconds to move ``bytes_`` in ``issues`` async copies:
+    ``issues x per_copy_overhead + bytes / bandwidth``.  The first term
+    is what run-length coalescing shrinks (issues: B*S*BUF per-row ->
+    B*S*NSEG) without touching the second."""
+    return float(issues) * per_copy_overhead + float(bytes_) / bandwidth
+
+
 def spmm_traffic(
     b: int,
     s: int,
@@ -62,26 +162,51 @@ def spmm_traffic(
     *,
     storage_bytes: int = 2,
     staging: str = "fused",
+    dma: str = "coalesced",
+    segments_per_stage: float | None = None,
 ) -> dict:
     """HBM bytes + FLOPs of one fused-minibatch SpMM over one shard.
 
     Returns a dict with the per-term byte counts, their sum
     (``hbm_bytes``), the slot FLOPs (``flops`` = 2 per nnz slot per
-    slice) and the arithmetic intensity (``intensity``, FLOP/B).
+    slice), the arithmetic intensity (``intensity``, FLOP/B), and the
+    DMA issue count of the window staging (``dma_issues``): one copy
+    per winmap row (``dma="per_row"``), one per run-length segment
+    (``dma="coalesced"``; measured ``segments_per_stage`` from
+    ``ops.winmap_segments`` when available, else the analytic
+    :func:`est_segments_per_stage`), or one BlockSpec tile per stage
+    for the gather baseline (XLA stages its windows in bulk).
     """
     if staging not in STAGINGS:
         raise ValueError(
             f"unknown staging {staging!r}; one of {STAGINGS}"
         )
+    if dma not in DMA_MODES:
+        raise ValueError(f"unknown dma {dma!r}; one of {DMA_MODES}")
     slots = float(b) * s * r * k
     win_entries = float(b) * s * buf
     passes = 1 if staging == "fused" else 2
+    seg = (
+        float(segments_per_stage)
+        if segments_per_stage is not None
+        else float(est_segments_per_stage(buf))
+    )
+    if staging == "gather":
+        issues = float(b) * s  # one [BUF, F] BlockSpec tile per stage
+        desc_bytes = win_entries * 4  # XLA gather reads the winmap
+    elif dma == "per_row":
+        issues = win_entries
+        desc_bytes = win_entries * 4  # int32 winmap prefetch
+    else:
+        issues = float(b) * s * seg
+        desc_bytes = float(b) * s * seg * 12  # {src, dst, len} int32
     out = {
         "operator_bytes": slots * (2 + storage_bytes),
-        "winmap_bytes": win_entries * 4,
+        "winmap_bytes": desc_bytes,
         "window_bytes": win_entries * storage_bytes * f * passes,
         "out_bytes": float(b) * r * f * 4 * 2,
         "flops": 2.0 * slots * f,
+        "dma_issues": issues,
     }
     out["hbm_bytes"] = (
         out["operator_bytes"] + out["winmap_bytes"]

@@ -9,9 +9,18 @@ tensor ever exists in HBM.  The CUDA kernel's mechanisms map as follows:
   Listing 1 (CUDA)               this kernel (Pallas TPU)
   =============================  =======================================
   shared-memory 3D input buffer  VMEM scratch ``win[2, BUF, F]``
-  buffer-load loop (l. 15-20)    per-row async DMAs HBM -> VMEM, driven
-                                 by the scalar-prefetched ``winmap``
-                                 (SMEM, ``PrefetchScalarGridSpec``)
+  buffer-load loop (l. 15-20)    async DMAs HBM -> VMEM, driven by the
+                                 scalar-prefetched window descriptors
+                                 (SMEM, ``PrefetchScalarGridSpec``):
+                                 one copy per run-length *segment* of
+                                 consecutive source rows (default), or
+                                 one per row (``winsegs=None`` A/B)
+  coalesced gmem loads           ``ops.winmap_segments`` run-length
+                                 encodes the winmap host-side (Hilbert
+                                 ordering makes runs long); each segment
+                                 is one strided multi-row copy, so DMA
+                                 issue overhead is amortized the same
+                                 way Listing 1 amortizes index loads
   multi-stage buffering          second grid dimension ``s``; the output
                                  block is revisited across stages and
                                  accumulated in fp32 (TPU grids execute
@@ -35,6 +44,15 @@ once per stage.  The legacy two-pass path -- XLA gather materializing
 is kept for A/B benchmarking under ``ops.apply_operator(staging=
 "gather")``.
 
+Scalar prefetch is *chunked*: the descriptors (``winsegs`` or the raw
+``winmap``) for at most ``smem_budget`` bytes of row-blocks are
+prefetched per inner ``pallas_call``, and an outer ``lax.scan`` walks
+the B-chunks (the same shape trick the legacy gather path uses for its
+HBM transient).  Production-B shards therefore no longer hit the
+whole-shard SMEM cliff the ROADMAP flagged; ``smem_bytes``/
+``seg_smem_bytes`` size one chunk and raise a named ``ValueError`` when
+even a single row-block cannot fit.
+
 The double-buffered working set (R*K indices + R*K values + 2 window
 slots + R*F accumulator) is sized to sit in the paper's ~96 KB
 shared-memory budget; see ``vmem_bytes`` below, used by the §Perf sweep
@@ -54,7 +72,17 @@ __all__ = [
     "spmm_block_ell_staged",
     "vmem_bytes",
     "smem_bytes",
+    "seg_smem_bytes",
+    "SMEM_BUDGET",
+    "VMEM_BUDGET",
 ]
+
+# Per-call scalar-memory budget for the prefetched window descriptors.
+# One chunk's descriptors must fit; the outer scan covers the rest.
+SMEM_BUDGET = 256 << 10
+# Per-grid-step on-chip working set ceiling (real VMEM is ~16 MB; the
+# paper's shared-memory budget is far tighter -- see vmem_bytes).
+VMEM_BUDGET = 16 << 20
 
 
 def _fma_block(inds_ref, window, vals_ref, compute_dtype):
@@ -77,8 +105,24 @@ def _fma_block(inds_ref, window, vals_ref, compute_dtype):
     )
 
 
+def _dma_classes(buf: int) -> tuple:
+    """Static power-of-two copy lengths a decomposed segment can have.
+
+    ``ops.winmap_segments`` splits every run into power-of-two pieces,
+    so the kernel can issue fixed-size copies (Pallas DMAs need static
+    extents) while still moving one *run* in O(log) issues instead of
+    O(len) per-row issues.
+    """
+    classes = []
+    ln = 1
+    while ln <= max(1, buf):
+        classes.append(ln)
+        ln *= 2
+    return tuple(classes)
+
+
 def _spmm_fused_kernel(
-    winmap_ref,  # [B, S, BUF] int32, scalar-prefetched (SMEM)
+    winmap_ref,  # [Bc, S, BUF] int32, scalar-prefetched (SMEM)
     inds_ref,  # [1, 1, R, K] int16 block (VMEM)
     vals_ref,  # [1, 1, R, K] storage-dtype block (VMEM)
     x_ref,  # [C, F] whole local slab (ANY -> HBM at size)
@@ -89,7 +133,7 @@ def _spmm_fused_kernel(
     compute_dtype,
     buf: int,
 ):
-    """One (row-block, stage) grid step with in-kernel window staging."""
+    """One (row-block, stage) grid step; per-row window DMAs (A/B path)."""
     i, s = pl.program_id(0), pl.program_id(1)
     n_s = pl.num_programs(1)
     step = i * n_s + s  # linear stage counter across the whole grid
@@ -112,6 +156,64 @@ def _spmm_fused_kernel(
 
         jax.lax.fori_loop(0, buf, one_row, None)
 
+    _staged_pipeline(window_dma, step, n_steps, s, out_ref)
+    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+def _spmm_fused_kernel_coalesced(
+    segs_ref,  # [Bc, S, NSEG, 3] int32 {src, dst, len} (SMEM)
+    inds_ref,  # [1, 1, R, K] int16 block (VMEM)
+    vals_ref,  # [1, 1, R, K] storage-dtype block (VMEM)
+    x_ref,  # [C, F] whole local slab (ANY -> HBM at size)
+    out_ref,  # [1, R, F] fp32 block, revisited across stages
+    win,  # VMEM scratch [2, BUF, F]
+    sems,  # DMA semaphores [2]
+    *,
+    compute_dtype,
+    nseg: int,
+    classes: tuple,
+):
+    """One (row-block, stage) grid step; run-length-coalesced DMAs.
+
+    The buffer-load loop issues ONE strided ``make_async_copy`` per
+    run-length segment: ``x[src:src+len] -> win[slot, dst:dst+len]``,
+    ``len`` a power of two from the static ``classes`` (pad segments
+    have ``len == 0`` and issue nothing).  Start and wait walk the same
+    predicates, so semaphore counts always balance.
+    """
+    i, s = pl.program_id(0), pl.program_id(1)
+    n_s = pl.num_programs(1)
+    step = i * n_s + s
+    n_steps = pl.num_programs(0) * n_s
+
+    def window_dma(which, slot, op):
+        bi, si = which // n_s, which % n_s
+        for ln in classes:  # static unroll: DMA extents must be static
+
+            def one_seg(j, carry, ln=ln):
+                @pl.when(segs_ref[bi, si, j, 2] == ln)
+                def _copy():
+                    dma = pltpu.make_async_copy(
+                        x_ref.at[pl.ds(segs_ref[bi, si, j, 0], ln)],
+                        win.at[slot, pl.ds(segs_ref[bi, si, j, 1], ln)],
+                        sems.at[slot],
+                    )
+                    getattr(dma, op)()
+
+                return carry
+
+            jax.lax.fori_loop(0, nseg, one_seg, None)
+
+    _staged_pipeline(window_dma, step, n_steps, s, out_ref)
+    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+def _staged_pipeline(window_dma, step, n_steps, s, out_ref):
+    """The shared multi-stage double-buffer schedule: prologue-load the
+    first window, prefetch stage ``step+1`` before computing ``step``."""
+
     @pl.when(step == 0)
     def _prologue():  # no stage before the first: load it synchronously
         window_dma(0, 0, "start")
@@ -125,9 +227,6 @@ def _spmm_fused_kernel(
     @pl.when(s == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
-
-    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
-    out_ref[...] += acc.astype(out_ref.dtype)
 
 
 def _spmm_staged_kernel(
@@ -151,36 +250,93 @@ def vmem_bytes(
     f: int,
     store_bytes: int = 2,
     stages_buffered: int = 2,
+    budget: int | None = None,
 ) -> int:
     """Per-grid-step VMEM footprint (the paper's 96 KB shared-mem budget).
 
     The fused path holds ``stages_buffered`` window slots (double
     buffering: stage ``s+1`` streams in while stage ``s`` computes);
     the staging memory is O(VMEM), not an O(64 MB) HBM transient.
+
+    With ``budget=`` the request is validated: a footprint above the
+    budget raises a ``ValueError`` naming the dominant dimension to
+    shrink, instead of letting Mosaic fail opaquely at lower time.
     """
-    return (
-        r * k * 2  # inds (int16)
-        + r * k * store_bytes  # vals
-        + stages_buffered * buf * f * store_bytes  # window slots
-        + r * f * 4  # fp32 accumulator / output block
-    )
+    terms = {
+        "R*K (inds, int16)": r * k * 2,
+        "R*K (vals)": r * k * store_bytes,
+        "BUF*F (window slots)": stages_buffered * buf * f * store_bytes,
+        "R*F (fp32 accumulator)": r * f * 4,
+    }
+    total = sum(terms.values())
+    if budget is not None and total > budget:
+        worst = max(terms, key=terms.get)  # type: ignore[arg-type]
+        raise ValueError(
+            f"kernel working set {total} B exceeds the {budget} B VMEM "
+            f"budget (R={r}, K={k}, BUF={buf}, F={f}); the dominant "
+            f"term is {worst} = {terms[worst]} B -- shrink that "
+            "dimension (rows_per_block / nnz_per_stage / window / fuse)"
+        )
+    return total
 
 
-def smem_bytes(b: int, s: int, buf: int) -> int:
-    """Scalar-memory footprint of the prefetched ``winmap`` (int32).
+def smem_bytes(
+    b: int, s: int, buf: int, budget: int | None = None
+) -> int:
+    """Scalar-memory footprint of a prefetched per-row ``winmap`` chunk
+    (int32), for ``b`` row-blocks.
 
-    The fused kernel prefetches the *whole* ``[B, S, BUF]`` winmap, so
-    this grows with the shard's block count B -- unlike ``vmem_bytes``,
-    which is per-grid-step.  Tier-1/bench shards sit far inside scalar
-    memory (pinned by ``tests/test_kernel_spmm.py``); production-B
-    shards need the winmap prefetch chunked over row-blocks before the
-    kernel is run on real hardware (ROADMAP: on-TPU validation).
+    ``spmm_block_ell`` chunks the prefetch over row-blocks so only one
+    chunk's descriptors sit in SMEM at a time; pass ``budget=`` to
+    validate a chunk -- a single row-block that cannot fit raises a
+    named ``ValueError`` (satellite of the ROADMAP on-TPU item).
     """
-    return b * s * buf * 4
+    total = b * s * buf * 4
+    if budget is not None and total > budget:
+        raise ValueError(
+            f"winmap chunk of {b} row-block(s) needs {total} B of SMEM "
+            f"(B_chunk={b} x S={s} x BUF={buf} x 4 B) but the budget is "
+            f"{budget} B; the offending dimensions are S*BUF = "
+            f"{s * buf} entries per row-block -- reduce the window "
+            "(BUF) or stage count (S), or raise smem_budget"
+        )
+    return total
+
+
+def seg_smem_bytes(
+    b: int, s: int, nseg: int, budget: int | None = None
+) -> int:
+    """Scalar-memory footprint of a prefetched ``winsegs`` chunk
+    (int32 ``{src, dst, len}`` triples), for ``b`` row-blocks."""
+    total = b * s * nseg * 3 * 4
+    if budget is not None and total > budget:
+        raise ValueError(
+            f"winsegs chunk of {b} row-block(s) needs {total} B of SMEM "
+            f"(B_chunk={b} x S={s} x NSEG={nseg} x 12 B) but the budget "
+            f"is {budget} B; the offending dimensions are S*NSEG = "
+            f"{s * nseg} segments per row-block -- a more fragmented "
+            "winmap (shorter runs) raises NSEG; reduce S/BUF or raise "
+            "smem_budget"
+        )
+    return total
+
+
+def _prefetch_chunk_blocks(
+    b: int, per_block_bytes: int, budget: int
+) -> int:
+    """Largest divisor of ``b`` whose descriptor chunk fits ``budget``."""
+    want = max(1, budget // max(1, per_block_bytes))
+    if want >= b:
+        return b
+    for d in range(min(want, b), 0, -1):
+        if b % d == 0:
+            return d
+    return 1
 
 
 @functools.partial(
-    jax.jit, static_argnames=("compute_dtype", "interpret")
+    jax.jit,
+    static_argnames=("compute_dtype", "interpret", "smem_budget"),
 )
 def spmm_block_ell(
     inds,
@@ -190,6 +346,8 @@ def spmm_block_ell(
     *,
     compute_dtype=jnp.float32,
     interpret: bool | None = None,
+    winsegs=None,
+    smem_budget: int | None = None,
 ):
     """Fused multi-stage SpMM over one device's blocked-ELL shard, with
     the window staging done *inside* the kernel (paper Listing 1).
@@ -197,28 +355,126 @@ def spmm_block_ell(
     Args:
       inds:   [B, S, R, K] int16 window-local indices.
       vals:   [B, S, R, K] storage-dtype lengths.
-      winmap: [B, S, BUF] int32 device-local input column ids; scalar-
-              prefetched to SMEM so the kernel can compute DMA source
-              addresses before each stage runs.
+      winmap: [B, S, BUF] int32 device-local input column ids (per-row
+              DMA path; ignored when ``winsegs`` is given).
       x:      [C, F] local input slab (storage dtype).  Stays whole in
               HBM; the kernel double-buffers each stage's BUF-row window
               into VMEM with async copies.  No ``[B, S, BUF, F]`` tensor
               is ever materialized.
       compute_dtype: FMA dtype (fp32 for the paper's mixed mode).
       interpret: force Pallas interpret mode; defaults to True off-TPU.
+      winsegs: [B, S, NSEG, 3] int32 run-length segments from
+              ``ops.winmap_segments``; when given, the kernel issues one
+              coalesced multi-row copy per segment instead of one copy
+              per ``winmap`` row (the default production path -- see
+              ``ops.apply_operator(dma=...)``).
+      smem_budget: per-call scalar-memory budget for the prefetched
+              descriptors; the prefetch is chunked over row-blocks to
+              fit (outer ``lax.scan``), so shards of any B run.
+              Defaults to ``SMEM_BUDGET``.
 
     Returns:
       [B, R, F] fp32 partial output band blocks.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    budget = SMEM_BUDGET if smem_budget is None else smem_budget
+    b, s, r, k = inds.shape
+    buf = winmap.shape[-1]
+    f = x.shape[-1]
+    vmem_bytes(
+        r, k, buf, f, jnp.dtype(vals.dtype).itemsize, budget=VMEM_BUDGET
+    )
+    coalesced = winsegs is not None
+    # validates too: a single over-budget row-block raises a named error
+    per_block = (
+        seg_smem_bytes(1, s, winsegs.shape[-2], budget=budget)
+        if coalesced
+        else smem_bytes(1, s, buf, budget=budget)
+    )
+    bpc = _prefetch_chunk_blocks(b, per_block, budget)
+
+    def one_call(ic, vc, wc, sc):
+        if coalesced:
+            return _pallas_fused_coalesced(
+                ic, vc, sc, x, buf, compute_dtype, interpret
+            )
+        return _pallas_fused_per_row(
+            ic, vc, wc, x, compute_dtype, interpret
+        )
+
+    if bpc >= b:
+        return one_call(inds, vals, winmap, winsegs)
+
+    n_chunk = b // bpc
+
+    def step(_, args):
+        return None, one_call(*args)
+
+    _, outs = jax.lax.scan(
+        step,
+        None,
+        (
+            inds.reshape(n_chunk, bpc, s, r, k),
+            vals.reshape(n_chunk, bpc, s, r, k),
+            winmap.reshape(n_chunk, bpc, s, buf),
+            (
+                winsegs.reshape(n_chunk, bpc, s, *winsegs.shape[2:])
+                if coalesced
+                else jnp.zeros((n_chunk, 1), jnp.int32)  # unused carry
+            ),
+        ),
+    )
+    return outs.reshape(b, r, f)
+
+
+def _pallas_fused_per_row(inds, vals, winmap, x, compute_dtype,
+                          interpret):
     b, s, r, k = inds.shape
     buf = winmap.shape[-1]
     f = x.shape[-1]
     kernel = functools.partial(
         _spmm_fused_kernel, compute_dtype=compute_dtype, buf=buf
     )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    return pl.pallas_call(
+        kernel,
+        grid_spec=_fused_grid_spec(b, s, r, k, buf, f, x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
+        # cross-step window prefetch orders the whole grid
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(winmap.astype(jnp.int32), inds, vals, x)
+
+
+def _pallas_fused_coalesced(inds, vals, winsegs, x, buf, compute_dtype,
+                            interpret):
+    """``buf`` (the scratch window height every dst range fits in) comes
+    from the caller's ``winmap.shape[-1]`` -- ``winmap_segments`` tiles
+    exactly ``[0, BUF)`` with its dst ranges."""
+    b, s, r, k = inds.shape
+    nseg = winsegs.shape[-2]
+    f = x.shape[-1]
+    kernel = functools.partial(
+        _spmm_fused_kernel_coalesced,
+        compute_dtype=compute_dtype,
+        nseg=nseg,
+        classes=_dma_classes(buf),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=_fused_grid_spec(b, s, r, k, buf, f, x.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(winsegs.astype(jnp.int32), inds, vals, x)
+
+
+def _fused_grid_spec(b, s, r, k, buf, f, x_dtype):
+    return pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, s),
         in_specs=[
@@ -228,20 +484,10 @@ def spmm_block_ell(
         ],
         out_specs=pl.BlockSpec((1, r, f), lambda i, j, wm: (i, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((2, buf, f), x.dtype),
+            pltpu.VMEM((2, buf, f), x_dtype),
             pltpu.SemaphoreType.DMA((2,)),
         ],
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
-        # cross-step window prefetch orders the whole grid
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(winmap.astype(jnp.int32), inds, vals, x)
 
 
 @functools.partial(

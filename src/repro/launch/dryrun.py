@@ -35,7 +35,8 @@ devices attached (a meshless two-level ladder, one CG iteration):
 ...     plan, ReconConfig(precision="mixed", comm_mode="hier"), topo,
 ...     fuse=4, iters=1,
 ... )
->>> sorted(an) == ['dci_dev', 'flops_dev', 'hbm_dev', 'ici_dev']
+>>> sorted(an) == ['dci_dev', 'dma_issues_dev', 'flops_dev', 'hbm_dev',
+...                'ici_dev']
 True
 >>> an["dci_dev"] == an["ici_dev"] / 8  # ladder: 1/|socket| crosses DCI
 True
@@ -470,23 +471,33 @@ def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
     volume per reduction is whatever ``topo.plan(rcfg.comm_mode)`` models
     for each link class -- one source of truth shared with the runtime
     collectives and ``benchmarks/bench_comms.py``.
+
+    ``dma_issues_dev`` counts the window-staging copies the kernel
+    issues (one per run-length segment under the default
+    ``rcfg.dma="coalesced"``, one per winmap row under ``"per_row"``)
+    so rooflines can price the fixed per-copy overhead with
+    ``kernels.traffic.dma_issue_seconds``.
     """
     from ..core.partition import exchange_volume_params
     from ..core.precision import get_policy
-    from ..kernels.traffic import spmm_traffic
+    from ..kernels.traffic import op_segments_per_stage, spmm_traffic
 
     pol = get_policy(rcfg.precision)
     sb, cb = pol.storage_bytes, pol.comm_bytes
     out = {"flops_dev": 0.0, "hbm_dev": 0.0, "ici_dev": 0.0,
-           "dci_dev": 0.0}
+           "dci_dev": 0.0, "dma_issues_dev": 0.0}
     for op in (plan.proj, plan.back):
         _, b, s, r, k = op.inds.shape
+        segs = op_segments_per_stage(op)
         t = spmm_traffic(
             b, s, r, k, op.winmap.shape[-1], fuse, storage_bytes=sb,
             staging=getattr(rcfg, "staging", "fused"),
+            dma=getattr(rcfg, "dma", "coalesced"),
+            segments_per_stage=segs,
         )
         out["flops_dev"] += iters * t["flops"]
         out["hbm_dev"] += iters * t["hbm_bytes"]
+        out["dma_issues_dev"] += iters * t["dma_issues"]
         dense = float(op.n_rows_pad) * fuse * cb
         params = (
             exchange_volume_params(op, topo)

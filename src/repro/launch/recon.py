@@ -50,6 +50,17 @@ def main(argv=None):
         "--workdir", default=None,
         help="store + resume-manifest dir for --stream (default: temp)",
     )
+    ap.add_argument(
+        "--dma", default="coalesced", choices=("coalesced", "per_row"),
+        help="window-DMA issue mode of the fused kernel (A/B)",
+    )
+    ap.add_argument(
+        "--device-upload", default="overlap",
+        choices=("overlap", "sync"),
+        help="--stream: double-buffer the host->device slab upload "
+             "in the prefetch thread (overlap) or keep it on the "
+             "critical path (sync)",
+    )
     args = ap.parse_args(argv)
 
     geo = XCTGeometry(n=args.n, n_angles=args.angles)
@@ -79,7 +90,7 @@ def main(argv=None):
         plan, mesh=mesh,
         cfg=ReconConfig(
             precision=args.precision, comm_mode=args.comm,
-            fuse=args.fuse,
+            fuse=args.fuse, dma=args.dma,
         ),
     )
 
@@ -125,6 +136,7 @@ def _run_streaming(args, geo, a, rec):
         rec, sino_store, os.path.join(workdir, "vol"),
         iters=args.iters, mem_budget=budget,
         ckpt_dir=os.path.join(workdir, "ckpt"),
+        device_upload=args.device_upload,
     )
     dt = time.time() - t0
     # slab-wise QA: the full volume never lives in host memory
@@ -139,13 +151,22 @@ def _run_streaming(args, geo, a, rec):
             / np.linalg.norm(x_true, axis=0)
         )
     rel = np.concatenate(errs)
+    split = ""
+    if result.solved:
+        split = (
+            f" | per-slab load/upload/solve "
+            f"{np.mean(result.load_seconds) * 1e3:.0f}/"
+            f"{np.mean(result.upload_seconds) * 1e3:.0f}/"
+            f"{np.mean(result.solve_seconds) * 1e3:.0f} ms"
+            + (" (upload hidden)" if result.upload_overlapped else "")
+        )
     print(
         f"streamed {args.slices} slices in "
         f"{len(result.solved)} slab(s) of {result.y_slab} "
         f"(budget {args.mem_budget:.0f} MiB, skipped "
         f"{len(result.skipped)} via resume manifest) in {dt:.1f}s | "
         f"{args.slices / dt:.1f} slices/s | rel err mean "
-        f"{rel.mean():.4f}"
+        f"{rel.mean():.4f}" + split
     )
     return result, rel
 

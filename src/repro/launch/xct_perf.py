@@ -58,7 +58,11 @@ from ..core.partition import (
     exchange_volume_params,
 )
 from ..dist import MODES, Topology
-from ..kernels.traffic import spmm_traffic
+from ..kernels.traffic import (
+    dma_issue_seconds,
+    op_segments_per_stage,
+    spmm_traffic,
+)
 from .hlo_analysis import HW
 
 __all__ = ["comm_volume", "sweep_topology", "sweep"]
@@ -111,13 +115,20 @@ def comm_volume(plan, mode: str, fuse: int, comm_bytes: int,
     return out
 
 
-def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused"):
+def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused",
+          dma="coalesced"):
     """Full mode x fuse sweep of the analytic cost model.
 
     ``staging`` selects the SpMM memory-traffic model: the default
     in-kernel staging moves each window row over HBM once; the legacy
     ``"gather"`` baseline pays the extra staged-window round trip
-    (``kernels.traffic.spmm_traffic`` is the shared formula).
+    (``kernels.traffic.spmm_traffic`` is the shared formula).  ``dma``
+    selects the window-DMA issue model: the default run-length
+    coalescing issues O(NSEG) copies per stage, the ``"per_row"``
+    baseline O(BUF) -- the memory term prices both as
+    ``issues x per_copy_overhead + bytes / bw``
+    (``kernels.traffic.dma_issue_seconds``), so the sweep shows the
+    issue-overhead win at production scale.
     """
     ds = DATASETS[dataset]
     geo = XCTGeometry(n=ds.n, n_angles=ds.k)
@@ -134,17 +145,20 @@ def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused"):
             sb = 2  # mixed: f16/bf16 storage + wire
             flops = 0.0
             hbm = 0.0
+            issues = 0.0
             for op in (plan.proj, plan.back):
                 _, b, s, r, k = op.inds.shape
                 t = spmm_traffic(
                     b, s, r, k, op.winmap.shape[-1], fuse,
-                    storage_bytes=sb, staging=staging,
+                    storage_bytes=sb, staging=staging, dma=dma,
+                    segments_per_stage=op_segments_per_stage(op),
                 )
                 flops += iters * t["flops"]
                 hbm += iters * t["hbm_bytes"]
+                issues += iters * t["dma_issues"]
             cv = comm_volume(plan, mode, fuse, sb, topo)
             t_comp = flops / HW.peak_flops
-            t_mem = hbm / HW.hbm_bw
+            t_mem = dma_issue_seconds(issues, hbm, HW.hbm_bw)
             t_coll = iters * (
                 cv["ici"] / HW.ici_bw + cv["dci"] / HW.dci_bw
             )
@@ -153,7 +167,7 @@ def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused"):
             rows.append({
                 "dataset": dataset, "mode": mode, "fuse": fuse,
                 "t_compute": t_comp, "t_memory": t_mem,
-                "t_collective": t_coll,
+                "t_collective": t_coll, "dma_issues": issues,
                 "dominant": max(
                     (("compute", t_comp), ("memory", t_mem),
                      ("collective", t_coll)), key=lambda kv: kv[1],

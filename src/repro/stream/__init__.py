@@ -12,7 +12,7 @@ See docs/architecture.md ("Out-of-core streaming") for the slab-size
 formula and the overlap schedule.
 """
 from .driver import StreamResult, reconstruct_streaming
-from .scheduler import Prefetcher, SlabPlan, suggest_slab
+from .scheduler import PrefetchError, Prefetcher, SlabPlan, suggest_slab
 from .store import SlabStore, simulate_to_store
 
 __all__ = [
@@ -21,6 +21,7 @@ __all__ = [
     "SlabPlan",
     "suggest_slab",
     "Prefetcher",
+    "PrefetchError",
     "StreamResult",
     "reconstruct_streaming",
 ]

@@ -11,11 +11,16 @@ with prefetch) in host memory:
      problems sharing ``A`` (parallel-beam, paper Sec. II-B), so a
      restart that re-solves only the remaining slabs converges to the
      identical volume;
-  3. for each pending slab: prefetch slab ``i+1`` from disk while slab
-     ``i`` solves (``scheduler.Prefetcher``, the Fig. 8 overlap lifted
-     one level up the memory hierarchy), run the in-memory
-     ``Reconstructor.reconstruct`` on the slab, write the reconstructed
-     slab to the volume store (atomic shard publish);
+  3. for each pending slab: prefetch slab ``i+1`` from disk -- and, by
+     default, stage it host -> device (``Reconstructor.stage_sino``) --
+     while slab ``i`` solves (``scheduler.Prefetcher``, the Fig. 8
+     overlap lifted up the memory hierarchy: the jit argument transfer
+     of the next slab hides under the current solve), run the in-memory
+     ``Reconstructor.reconstruct`` on the staged slab, write the
+     reconstructed slab to the volume store (atomic shard publish);
+     per-slab wall time is split into load / upload / solve so the
+     ``BENCH_stream`` artifacts show what each rung of the pipeline
+     actually hides;
   4. checkpoint the manifest every ``k`` slabs, ``k`` from the measured
      slab/write times via the Young/Daly optimum
      (``dist.fault.suggest_checkpoint_period``) unless pinned by
@@ -36,9 +41,12 @@ import time
 import numpy as np
 
 from ..ckpt import checkpoint as ckpt
+from ..core.recon import StagedSlab
 from ..dist.fault import suggest_checkpoint_period
 from .scheduler import Prefetcher, suggest_slab
 from .store import SlabStore
+
+UPLOAD_MODES = ("overlap", "sync")
 
 __all__ = ["StreamResult", "reconstruct_streaming"]
 
@@ -52,7 +60,12 @@ class StreamResult:
     y_slab: int
     solved: list  # slab starts solved by THIS call
     skipped: list  # slab starts skipped via the resume manifest
-    slab_seconds: list  # wall time per solved slab
+    slab_seconds: list  # critical-path wall time per solved slab
+    # the per-slab pipeline split (parallel lists to ``solved``):
+    load_seconds: list = dataclasses.field(default_factory=list)
+    upload_seconds: list = dataclasses.field(default_factory=list)
+    solve_seconds: list = dataclasses.field(default_factory=list)
+    upload_overlapped: bool = False  # uploads ran off the critical path
 
     @property
     def complete(self) -> bool:
@@ -77,6 +90,7 @@ def reconstruct_streaming(
     y_slab: int | None = None,
     ckpt_dir: str | None = None,
     overlap: bool = True,
+    device_upload: str = "overlap",
     checkpoint_every: int | None = None,
     max_slabs: int | None = None,
 ) -> StreamResult:
@@ -95,6 +109,12 @@ def reconstruct_streaming(
       ckpt_dir: resume-manifest directory; restart skips slabs recorded
         done there.  ``None`` disables checkpointing.
       overlap: prefetch the next slab while the current one solves.
+      device_upload: "overlap" (default) runs the host->device staging
+        (``rec.stage_sino``: pack + normalize + jit-arg upload) in the
+        prefetch thread too, double-buffering the device transfer the
+        ROADMAP flagged as riding synchronously inside ``reconstruct``;
+        "sync" keeps the upload on the critical path (A/B baseline --
+        ``bench_stream`` sweeps both).  Results are bit-identical.
       checkpoint_every: manifest cadence in slabs; ``None`` derives it
         from measured slab/write costs (Young/Daly).
       max_slabs: stop after solving this many slabs (simulated
@@ -102,6 +122,11 @@ def reconstruct_streaming(
     """
     if (mem_budget is None) == (y_slab is None):
         raise ValueError("pass exactly one of mem_budget= / y_slab=")
+    if device_upload not in UPLOAD_MODES:
+        raise ValueError(
+            f"unknown device_upload {device_upload!r}; "
+            f"one of {UPLOAD_MODES}"
+        )
     geo = rec.plan.geo
     if sino_store.rows != geo.n_rays:
         raise ValueError(
@@ -171,23 +196,44 @@ def reconstruct_streaming(
     skipped = [slabs[i][0] for i in range(len(slabs)) if done[i]]
     solved: list = []
     slab_seconds: list = []
+    load_seconds: list = []
+    upload_seconds: list = []
+    solve_seconds: list = []
     n_nodes = max(1, rec.mesh.size)
     every = checkpoint_every
     since_save = 0
 
+    up_overlap = device_upload == "overlap"
     fetch = lambda i: sino_store.read(*slabs[i])  # noqa: E731
-    for i, y_nat in Prefetcher(
-        fetch, pending, depth=1, enabled=overlap
-    ):
+    pre = Prefetcher(
+        fetch, pending, depth=1, enabled=overlap,
+        # host->device staging in the worker thread: slab i+1's upload
+        # runs while slab i solves (ROADMAP: double-buffer the device
+        # upload too)
+        stage=rec.stage_sino if up_overlap else None,
+    )
+    for pos, (i, slab_in) in enumerate(pre):
         j0, j1 = slabs[i]
         t0 = time.perf_counter()
-        x, r = rec.reconstruct(y_nat, iters=iters)
+        if up_overlap:
+            staged = slab_in  # StagedSlab, upload already done
+            t_up = pre.times[pos]["stage"]
+        else:
+            staged = rec.stage_sino(slab_in)
+            t_up = time.perf_counter() - t0
+        assert isinstance(staged, StagedSlab)
+        t1 = time.perf_counter()
+        x, r = rec.reconstruct(staged, iters=iters)
+        t_solve = time.perf_counter() - t1
         volume.write(j0, x)
         dt = time.perf_counter() - t0
         res[:, j0:j1] = r
         done[i] = 1
         solved.append(j0)
         slab_seconds.append(dt)
+        load_seconds.append(pre.times[pos]["load"])
+        upload_seconds.append(t_up)
+        solve_seconds.append(t_solve)
         since_save += 1
         if every is None and ckpt_dir is not None:
             # first slab: measure one save, then derive the Young/Daly
@@ -210,4 +256,10 @@ def reconstruct_streaming(
         solved=solved,
         skipped=skipped,
         slab_seconds=slab_seconds,
+        load_seconds=load_seconds,
+        upload_seconds=upload_seconds,
+        solve_seconds=solve_seconds,
+        # with disk prefetch on, loads of slab i+1 hide under slab i's
+        # solve; with device_upload="overlap" the upload does too
+        upload_overlapped=bool(overlap and up_overlap),
     )

@@ -18,7 +18,9 @@ re-pays this never).  ``per_slice`` is the per-slice working set:
     ``core.solver.cgnr``;
   * host staging of the sinogram slab in and the volume slab out
     (``4 * (rows_pad + cols_pad)``), doubled when the prefetcher
-    double-buffers (slab ``i+1`` loads while slab ``i`` solves).
+    double-buffers (slab ``i+1`` loads while slab ``i`` solves), plus
+    the next slab's device-staged sinogram (``4 * rows_pad``) under the
+    driver's default device-upload overlap.
 
 ``Y_slab`` is rounded down to the solve granule ``n_batch * fuse``
 (``Reconstructor`` requires it) and capped at ``Y``.  The plan also
@@ -32,16 +34,41 @@ arithmetic intensity per slab without re-deriving byte counts.
 the hierarchy: a single background thread fetches slab ``i+1`` from the
 store while the solver owns slab ``i`` -- same pipeline shape as the
 in-solve minibatch overlap (``core.pipeline``), applied to disk -> host
-instead of compute -> wire.
+instead of compute -> wire.  With a ``stage=`` callable it also covers
+the *next* rung: the thread runs host -> device staging (e.g.
+``Reconstructor.stage_sino``) right after the disk read, so slab
+``i+1``'s upload hides under slab ``i``'s solve too.  Fetch/stage wall
+times are recorded per item (``Prefetcher.times``) and thread failures
+surface at the consuming ``next()`` as :class:`PrefetchError` naming
+the failing item -- a dead prefetch thread can no longer hang the
+drain loop silently.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Iterable, Sequence
 
-__all__ = ["SlabPlan", "suggest_slab", "Prefetcher"]
+__all__ = ["SlabPlan", "suggest_slab", "Prefetcher", "PrefetchError"]
+
+
+class PrefetchError(RuntimeError):
+    """A background fetch/stage failed.
+
+    Raised by :class:`Prefetcher` at the consuming ``next()`` -- never
+    swallowed in the worker thread -- with the failing item and its
+    position attached so a driver can checkpoint/skip deterministically.
+    """
+
+    def __init__(self, item, index: int, cause: BaseException):
+        self.item = item
+        self.index = index
+        super().__init__(
+            f"prefetch of item {item!r} (index {index}) failed: "
+            f"{type(cause).__name__}: {cause}"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,12 +93,16 @@ class SlabPlan:
 
 
 def _op_traffic(op, fuse: int, storage_bytes: int) -> tuple[float, float]:
-    from ..kernels.traffic import spmm_traffic
+    from ..kernels.traffic import op_segments_per_stage, spmm_traffic
 
     _, b, s, r, k = op.inds.shape
     t = spmm_traffic(
         b, s, r, k, op.winmap.shape[-1], fuse,
         storage_bytes=storage_bytes, staging="fused",
+        # measured winsegs tables for real plans, est capacity for
+        # abstract ones -- same dispatch as xct_perf/dryrun, so the
+        # BENCH_stream 'ai' the CI gate pins is the measured model
+        segments_per_stage=op_segments_per_stage(op),
     )
     return t["hbm_bytes"], t["flops"]
 
@@ -109,9 +140,14 @@ def suggest_slab(
     fixed = proj.hbm_bytes(value_bytes=sb) + back.hbm_bytes(value_bytes=sb)
     rows_pad, cols_pad = proj.n_rows_pad, proj.n_cols_pad
     # 3 tomo-space + 3 sino-space f32 CG vectors, + (1 or 2 with the
-    # prefetch double buffer) host staging copies of slab-in + slab-out
+    # prefetch double buffer) host staging copies of slab-in + slab-out,
+    # + with overlap the next slab's device-staged sinogram
+    # (StagedSlab.y: the driver's default device_upload="overlap" keeps
+    # slab i+1 resident on device while slab i solves)
     staging_copies = 2 if overlap else 1
     per_slice = 4 * (3 + staging_copies) * (rows_pad + cols_pad)
+    if overlap:
+        per_slice += 4 * rows_pad
     granule = max(1, topology.n_batch) * cfg.fuse
     avail = mem_budget - fixed
     y_slab = (avail // per_slice // granule) * granule
@@ -147,13 +183,23 @@ def suggest_slab(
 
 
 class Prefetcher:
-    """Iterate ``(item, fetch(item))`` with background lookahead.
+    """Iterate ``(item, stage(fetch(item)))`` with background lookahead.
 
     One worker thread keeps ``depth`` fetches in flight ahead of the
     consumer: while the solver owns slab ``i``, slab ``i+1`` streams
-    disk -> host.  ``depth=0`` (or ``enabled=False``) degrades to a
-    plain synchronous loop -- the A/B knob ``bench_stream`` sweeps.
-    Exceptions in the fetch thread re-raise at the consuming ``next()``.
+    disk -> host (``fetch``) and, when ``stage=`` is given, host ->
+    device (e.g. ``Reconstructor.stage_sino``) -- the whole staging
+    ladder off the critical path.  ``depth=0`` (or ``enabled=False``)
+    degrades to a plain synchronous loop -- the A/B knob
+    ``bench_stream`` sweeps; ``stage`` still applies (inline) so
+    results never depend on the schedule.
+
+    Per-item wall times land in ``self.times[position] = {"load": s,
+    "stage": s}`` (keyed by the item's position in ``items`` -- items
+    themselves may be unhashable or duplicated) as each item is
+    produced.  A failure in the worker thread re-raises at the
+    consuming ``next()`` as :class:`PrefetchError` carrying the failing
+    item and position.
     """
 
     def __init__(
@@ -163,18 +209,35 @@ class Prefetcher:
         *,
         depth: int = 1,
         enabled: bool = True,
+        stage: Callable | None = None,
     ):
         self._fetch = fetch
+        self._stage = stage
         self._items = list(items)
         self._depth = depth if enabled else 0
+        self.times: dict = {}
 
     def __len__(self) -> int:
         return len(self._items)
 
+    def _produce(self, pos, item):
+        t0 = time.perf_counter()
+        out = self._fetch(item)
+        t1 = time.perf_counter()
+        if self._stage is not None:
+            out = self._stage(out)
+        t2 = time.perf_counter()
+        self.times[pos] = {"load": t1 - t0, "stage": t2 - t1}
+        return out
+
     def __iter__(self):
         if self._depth <= 0:
-            for it in self._items:
-                yield it, self._fetch(it)
+            for i, it in enumerate(self._items):
+                try:
+                    out = self._produce(i, it)
+                except Exception as e:  # noqa: BLE001
+                    raise PrefetchError(it, i, e) from e
+                yield it, out
             return
         with ThreadPoolExecutor(max_workers=1) as pool:
             pending = []
@@ -184,17 +247,27 @@ class Prefetcher:
             # staging copies suggest_slab budgets for
             while idx < len(self._items) and len(pending) < self._depth:
                 pending.append(
-                    (self._items[idx],
-                     pool.submit(self._fetch, self._items[idx]))
+                    (idx, self._items[idx],
+                     pool.submit(self._produce, idx, self._items[idx]))
                 )
                 idx += 1
             while pending:
-                item, fut = pending.pop(0)
-                out = fut.result()  # re-raises fetch errors here
+                i, item, fut = pending.pop(0)
+                try:
+                    out = fut.result()
+                except Exception as e:  # noqa: BLE001
+                    # surface the *failing slab* at the consumer instead
+                    # of leaving the drain loop to starve on a dead
+                    # worker.  Pool teardown waits for the already-
+                    # submitted lookahead fetch to finish (running
+                    # futures cannot be cancelled), so the error lands
+                    # after at most one extra slab's worth of I/O.
+                    raise PrefetchError(item, i, e) from e
                 if idx < len(self._items):
                     pending.append(
-                        (self._items[idx],
-                         pool.submit(self._fetch, self._items[idx]))
+                        (idx, self._items[idx],
+                         pool.submit(self._produce, idx,
+                                     self._items[idx]))
                     )
                     idx += 1
                 yield item, out

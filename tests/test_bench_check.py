@@ -1,0 +1,116 @@
+"""tools/bench_check.py: the bench-smoke regression gate (ISSUE 5).
+
+``ai`` is gated absolutely (deterministic model output); ``slices_per_s``
+is gated after machine normalization (suite-mean rescale), so a uniformly
+slower CI runner passes while a row regressing relative to its
+suite-mates fails.
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parent.parent / "tools")
+)
+import bench_check  # noqa: E402
+
+
+def _write(d: pathlib.Path, name: str, rows: list):
+    d.mkdir(parents=True, exist_ok=True)
+    (d / name).write_text(json.dumps(rows))
+
+
+ROWS = [
+    {"name": "stream/slab2/sync", "slices_per_s": 10.0, "ai": 0.5},
+    {"name": "stream/slab2/overlap_dev", "slices_per_s": 12.0,
+     "ai": 0.5},
+    {"name": "stream/slab4/sync", "slices_per_s": 8.0, "ai": 0.5},
+    {"name": "stream/slab4/overlap_dev", "slices_per_s": 10.0,
+     "ai": 0.5},
+]
+
+
+def _run(tmp_path, fresh_rows, name="BENCH_stream.json"):
+    _write(tmp_path / "base", "BENCH_stream.json", ROWS)
+    _write(tmp_path / "fresh", name, fresh_rows)
+    return bench_check.main(
+        ["--baseline", str(tmp_path / "base"),
+         "--fresh", str(tmp_path / "fresh")]
+    )
+
+
+def test_identical_passes(tmp_path):
+    assert _run(tmp_path, ROWS) == 0
+
+
+def test_uniform_runner_slowdown_passes(tmp_path):
+    """A 2x slower machine must not fail the wall-clock gate: the
+    comparison is machine-normalized."""
+    slow = [dict(r, slices_per_s=r["slices_per_s"] * 0.5) for r in ROWS]
+    assert _run(tmp_path, slow) == 0
+
+
+def test_relative_throughput_regression_fails(tmp_path):
+    """One row collapsing relative to its suite-mates fails even after
+    machine normalization."""
+    bad = [dict(r) for r in ROWS]
+    bad[0]["slices_per_s"] = 3.0  # 70% down; suite mean barely moves
+    assert _run(tmp_path, bad) == 1
+
+
+def test_modeled_ai_regression_fails_absolutely(tmp_path):
+    bad = [dict(r) for r in ROWS]
+    bad[1]["ai"] = 0.3  # 40% down, deterministic field
+    assert _run(tmp_path, bad) == 1
+
+
+def test_small_wobble_and_new_rows_pass(tmp_path):
+    """<=25% noise and added/dropped rows do not fail the gate."""
+    ok = [dict(r) for r in ROWS[:3]]  # one row dropped
+    ok[0]["slices_per_s"] *= 0.85  # within threshold after rescale
+    ok.append({"name": "stream/slab8/new", "slices_per_s": 1.0})
+    assert _run(tmp_path, ok) == 0
+
+
+def test_improvements_pass(tmp_path):
+    up = [dict(r, slices_per_s=r["slices_per_s"] * 3, ai=1.0)
+          for r in ROWS]
+    assert _run(tmp_path, up) == 0
+
+
+def test_unknown_suite_skipped_but_zero_compared_fails(tmp_path):
+    """A fresh suite without a baseline is skipped -- but comparing
+    NOTHING is a failure (a mispointed gate must not pass silently)."""
+    _write(tmp_path / "base", "BENCH_stream.json", ROWS)
+    _write(tmp_path / "fresh", "BENCH_stream.json", ROWS)
+    _write(tmp_path / "fresh", "BENCH_new_suite.json", ROWS)
+    rc = bench_check.main(
+        ["--baseline", str(tmp_path / "base"),
+         "--fresh", str(tmp_path / "fresh")]
+    )
+    assert rc == 0  # stream compared, new suite skipped
+    empty = tmp_path / "nothing"
+    empty.mkdir()
+    rc = bench_check.main(
+        ["--baseline", str(empty), "--fresh", str(tmp_path / "fresh")]
+    )
+    assert rc == 1  # zero suites compared == broken gate
+
+
+@pytest.mark.parametrize("scale", [0.5, 2.0])
+def test_normalization_reports_scale(tmp_path, capsys, scale):
+    bad = [dict(r, slices_per_s=r["slices_per_s"] * scale) for r in ROWS]
+    bad[0]["slices_per_s"] = ROWS[0]["slices_per_s"] * scale * 0.25
+    assert _run(tmp_path, bad) == 1
+    assert "machine-normalized" in capsys.readouterr().out
+
+
+def test_single_big_improvement_does_not_flag_others(tmp_path):
+    """Median normalization: one genuine 4x win in one row must not
+    drag the unchanged rows into false regressions (a mean-based scale
+    would)."""
+    up = [dict(r) for r in ROWS]
+    up[1]["slices_per_s"] = ROWS[1]["slices_per_s"] * 4
+    assert _run(tmp_path, up) == 0

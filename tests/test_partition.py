@@ -215,5 +215,7 @@ def test_hbm_bytes_counts_resident_operator_only(small_system):
     staging-related (in-kernel staging has no HBM window tensor)."""
     _, _, plan = small_system
     op = plan.proj
-    want = op.padded_nnz * 4 + (op.winmap.size + op.row_map.size) * 4
+    want = op.padded_nnz * 4 + (
+        op.winmap.size + op.winsegs.size + op.row_map.size
+    ) * 4
     assert op.hbm_bytes() == want

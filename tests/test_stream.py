@@ -12,9 +12,10 @@ import os
 import numpy as np
 import pytest
 
-from repro.core.recon import ReconConfig, Reconstructor
+from repro.core.recon import ReconConfig, Reconstructor, StagedSlab
 from repro.data.phantom import phantom_slices, simulate_measurements
 from repro.stream import (
+    PrefetchError,
     Prefetcher,
     SlabStore,
     reconstruct_streaming,
@@ -108,15 +109,21 @@ def test_simulate_chunk_kwarg_invariant(small_system):
 def test_suggest_slab_formula_and_guard(small_system, rec):
     _, _, plan = small_system
     topo = rec.topology
-    sp = suggest_slab(plan, rec.cfg, topo, 2_000_000, n_slices=Y)
+    # operator footprint (incl. the winsegs DMA tables) + some slack
+    budget = plan.proj.hbm_bytes() + plan.back.hbm_bytes() + 1_000_000
+    sp = suggest_slab(plan, rec.cfg, topo, budget, n_slices=Y)
     assert sp.granule == 2 and sp.y_slab % 2 == 0
-    assert sp.slab_bytes <= 2_000_000
-    per = 4 * 5 * (plan.proj.n_rows_pad + plan.proj.n_cols_pad)
+    assert sp.slab_bytes <= budget
+    # 5 host copies + the overlap-staged device sinogram of slab i+1
+    per = (
+        4 * 5 * (plan.proj.n_rows_pad + plan.proj.n_cols_pad)
+        + 4 * plan.proj.n_rows_pad
+    )
     assert sp.per_slice_bytes == per
     with pytest.raises(ValueError):  # operator alone overflows
         suggest_slab(plan, rec.cfg, topo, sp.fixed_bytes)
     sync = suggest_slab(
-        plan, rec.cfg, topo, 2_000_000, n_slices=Y, overlap=False
+        plan, rec.cfg, topo, budget, n_slices=Y, overlap=False
     )
     assert sync.per_slice_bytes < sp.per_slice_bytes  # one staging copy
 
@@ -139,6 +146,54 @@ def test_prefetcher_orders_and_propagates_errors():
     assert list(Prefetcher(lambda i: i, [5, 6], enabled=False)) == [
         (5, 5), (6, 6),
     ]
+
+
+def test_prefetcher_error_names_failing_item():
+    """Satellite: a dead fetch thread surfaces at the consuming next()
+    as PrefetchError carrying the failing item + position -- mid-drain,
+    not a hang, and not attributed to the wrong slab."""
+
+    def fetch(i):
+        if i == 12:
+            raise OSError("disk gone")
+        return i
+
+    got = []
+    with pytest.raises(PrefetchError, match=r"item 12 .*disk gone") as e:
+        for item, val in Prefetcher(fetch, [4, 8, 12, 16], depth=1):
+            got.append(item)
+    assert got == [4, 8]  # slabs before the failure were delivered
+    assert e.value.item == 12 and e.value.index == 2
+    assert isinstance(e.value.__cause__, OSError)
+    # the synchronous path wraps identically
+    with pytest.raises(PrefetchError, match="item 12"):
+        list(Prefetcher(fetch, [12], enabled=False))
+
+
+def test_prefetcher_stage_applies_and_times():
+    """The device-stage callable runs in the worker (overlap) and
+    inline (sync) with identical results, and per-item load/stage wall
+    times are recorded either way (keyed by position, so unhashable or
+    duplicated items are fine)."""
+    for enabled in (True, False):
+        pre = Prefetcher(
+            lambda i: i * 10, [1, 1], stage=lambda v: v + 5,
+            enabled=enabled,
+        )
+        assert list(pre) == [(1, 15), (1, 15)]
+        assert set(pre.times) == {0, 1}  # positions, not item values
+        for t in pre.times.values():
+            assert t["load"] >= 0.0 and t["stage"] >= 0.0
+    # unhashable items are accepted
+    pre = Prefetcher(lambda a: float(a.sum()), [np.zeros(2)], depth=1)
+    out = list(pre)
+    assert len(out) == 1 and out[0][1] == 0.0 and 0 in pre.times
+    # a failing stage is attributed like a failing fetch
+    with pytest.raises(PrefetchError, match="item 7"):
+        list(Prefetcher(
+            lambda i: i, [7],
+            stage=lambda v: (_ for _ in ()).throw(ValueError("up")),
+        ))
 
 
 # --------------------------------------------------------------------- #
@@ -224,19 +279,64 @@ def test_streaming_resume_skips_and_matches(rec, sino_store, tmp_path):
 
 
 def test_streaming_overlap_is_pure_schedule(rec, sino_store, tmp_path):
-    """Prefetching must not change results (same discipline as the
-    Fig. 8 overlap test)."""
-    a = reconstruct_streaming(
-        rec, sino_store, str(tmp_path / "a"), iters=5, y_slab=4,
-        overlap=False,
-    )
-    b = reconstruct_streaming(
-        rec, sino_store, str(tmp_path / "b"), iters=5, y_slab=4,
-        overlap=True,
-    )
-    np.testing.assert_array_equal(
-        a.volume.to_array(), b.volume.to_array()
-    )
+    """Prefetching and device-upload double-buffering must not change
+    results (same discipline as the Fig. 8 overlap test): every cell of
+    the (disk overlap) x (device upload) A/B grid is bit-identical."""
+    outs = {}
+    for overlap in (False, True):
+        for upload in ("sync", "overlap"):
+            tag = f"{overlap}-{upload}"
+            outs[tag] = reconstruct_streaming(
+                rec, sino_store, str(tmp_path / tag), iters=5, y_slab=4,
+                overlap=overlap, device_upload=upload,
+            )
+    base = outs["False-sync"].volume.to_array()
+    for tag, res in outs.items():
+        np.testing.assert_array_equal(base, res.volume.to_array())
+    # only the fully overlapped schedule hides the upload
+    assert outs["True-overlap"].upload_overlapped
+    assert not outs["True-sync"].upload_overlapped
+    assert not outs["False-overlap"].upload_overlapped
+
+
+def test_streaming_timing_split(rec, sino_store, tmp_path):
+    """The per-slab load/upload/solve split is recorded for every
+    solved slab, in both upload modes (ISSUE 5: BENCH_stream derives
+    upload-hidden-under-solve from these fields)."""
+    for upload in ("sync", "overlap"):
+        res = reconstruct_streaming(
+            rec, sino_store, str(tmp_path / f"t_{upload}"), iters=4,
+            y_slab=4, overlap=True, device_upload=upload,
+        )
+        n = len(res.solved)
+        assert n == 2
+        assert len(res.load_seconds) == n
+        assert len(res.upload_seconds) == n
+        assert len(res.solve_seconds) == n
+        assert all(t > 0 for t in res.solve_seconds)
+        assert all(t >= 0 for t in res.load_seconds)
+        assert all(t >= 0 for t in res.upload_seconds)
+        # solve dominates this CPU workload: the hidden upload fits
+        # under it, which is what "upload hidden under solve" means
+        if upload == "overlap":
+            assert res.upload_overlapped
+    with pytest.raises(ValueError, match="device_upload"):
+        reconstruct_streaming(
+            rec, sino_store, str(tmp_path / "bad"), iters=2, y_slab=4,
+            device_upload="nope",
+        )
+
+
+def test_staged_slab_reconstruct_matches(rec, sino8):
+    """Reconstructor.stage_sino + reconstruct(StagedSlab) is the same
+    computation as reconstruct(numpy), bit for bit."""
+    y = sino8[:, :4]
+    staged = rec.stage_sino(y)
+    assert isinstance(staged, StagedSlab) and staged.n_slices == 4
+    x_direct, r_direct = rec.reconstruct(y, iters=5)
+    x_staged, r_staged = rec.reconstruct(staged, iters=5)
+    np.testing.assert_array_equal(x_direct, x_staged)
+    np.testing.assert_array_equal(r_direct, r_staged)
 
 
 def test_streaming_guards(rec, sino_store, tmp_path):

@@ -1,0 +1,182 @@
+"""Bench regression gate: fresh BENCH_<suite>.json vs committed baseline.
+
+The quick benches write ``BENCH_<suite>.json`` into the working
+directory (gitignored); the committed baselines live in
+``benchmarks/baseline/``.  CI's bench-smoke job runs the benches, then:
+
+  python tools/bench_check.py --baseline benchmarks/baseline --fresh .
+
+Rows are matched by ``name``.  For every matched row, each *guarded
+field* is compared and the check fails on a regression worse than the
+threshold (default 25%):
+
+  ai             higher is better; compared ABSOLUTELY.  Modeled
+                 arithmetic intensity is deterministic, so any drop is
+                 a real model/layout regression, not noise.
+  slices_per_s   higher is better; compared after rescaling the fresh
+                 suite by the MEDIAN per-row fresh/baseline ratio
+                 ("machine normalization": the committed baseline was
+                 measured on a different machine, so absolute
+                 wall-clock would gate runner speed, not code).  A
+                 single row regressing relative to its suite-mates
+                 still trips the gate; a uniformly slower runner does
+                 not, and a single large improvement cannot drag the
+                 other rows into false regressions (median, not mean).
+
+Rows present on only one side are reported but do not fail the check
+(benches gain/lose rows as sweeps evolve); suites missing a baseline
+file are skipped.  Comparing ZERO suites is itself a failure -- a
+misconfigured path must not silently disable the gate.  On failure the
+tool prints how to refresh the baseline intentionally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# field -> (direction, comparison): "up" = bigger is better;
+# "absolute" fields gate raw values, "normalized" fields gate the
+# machine-normalized shape (see module docstring)
+GUARDED_FIELDS = {
+    "ai": ("up", "absolute"),
+    "slices_per_s": ("up", "normalized"),
+}
+
+UPDATE_HINT = """\
+If this regression is intentional (model change, re-baselined bench),
+refresh the committed baseline and commit it:
+
+  PYTHONPATH=src python -m benchmarks.run --quick --only spmm,comms,stream
+  cp BENCH_*.json benchmarks/baseline/
+  git add benchmarks/baseline
+"""
+
+
+def _load(path: pathlib.Path) -> dict:
+    """``{row name: row dict}`` from one BENCH_<suite>.json file."""
+    rows = json.loads(path.read_text())
+    return {r["name"]: r for r in rows}
+
+
+def _suite_scale(baseline: dict, fresh: dict, field: str) -> float:
+    """Median per-row fresh/baseline ratio of ``field`` over matched
+    rows -- the machine-speed factor to divide out.  Median, so one
+    outlier row (a genuine big win or loss) cannot skew the scale and
+    flag the unchanged rows."""
+    ratios = sorted(
+        float(fresh[n][field]) / float(baseline[n][field])
+        for n in baseline
+        if n in fresh and field in baseline[n] and field in fresh[n]
+        and float(baseline[n][field]) > 0
+    )
+    if not ratios:
+        return 1.0
+    mid = len(ratios) // 2
+    if len(ratios) % 2:
+        return ratios[mid]
+    return 0.5 * (ratios[mid - 1] + ratios[mid])
+
+
+def compare(
+    baseline: dict, fresh: dict, threshold: float
+) -> tuple[list, list]:
+    """Returns ``(failures, notes)`` comparing matched rows' guarded
+    fields; a failure is a > ``threshold`` relative regression."""
+    failures, notes = [], []
+    scales = {
+        field: (
+            _suite_scale(baseline, fresh, field)
+            if kind == "normalized" else 1.0
+        )
+        for field, (_, kind) in GUARDED_FIELDS.items()
+    }
+    for name in sorted(set(baseline) | set(fresh)):
+        if name not in fresh:
+            notes.append(f"row only in baseline (dropped?): {name}")
+            continue
+        if name not in baseline:
+            notes.append(f"new row (no baseline): {name}")
+            continue
+        b, f = baseline[name], fresh[name]
+        for field, (direction, kind) in GUARDED_FIELDS.items():
+            if field not in b or field not in f:
+                continue
+            bv = float(b[field])
+            fv = float(f[field]) / max(scales[field], 1e-12)
+            if bv <= 0:
+                continue
+            rel = (fv - bv) / bv
+            if direction == "up" and rel < -threshold:
+                norm = (
+                    f" (machine-normalized /{scales[field]:.3f})"
+                    if kind == "normalized" else ""
+                )
+                failures.append(
+                    f"{name}: {field} regressed {100 * -rel:.1f}% "
+                    f"({bv:g} -> {fv:g}{norm})"
+                )
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--baseline", required=True,
+        help="directory holding the committed BENCH_*.json files",
+    )
+    ap.add_argument(
+        "--fresh", default=".",
+        help="directory holding the freshly generated BENCH_*.json",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=0.25,
+        help="relative regression that fails the check (default 0.25)",
+    )
+    args = ap.parse_args(argv)
+    base_dir = pathlib.Path(args.baseline)
+    fresh_dir = pathlib.Path(args.fresh)
+
+    all_failures: list = []
+    checked = 0
+    for fresh_file in sorted(fresh_dir.glob("BENCH_*.json")):
+        base_file = base_dir / fresh_file.name
+        if not base_file.exists():
+            print(f"SKIP {fresh_file.name}: no committed baseline")
+            continue
+        failures, notes = compare(
+            _load(base_file), _load(fresh_file), args.threshold
+        )
+        for n in notes:
+            print(f"  note [{fresh_file.name}] {n}")
+        for f in failures:
+            print(f"  FAIL [{fresh_file.name}] {f}")
+        all_failures += failures
+        checked += 1
+        print(
+            f"{fresh_file.name}: "
+            f"{'FAIL' if failures else 'ok'} "
+            f"({len(failures)} regression(s))"
+        )
+    if checked == 0:
+        # a gate that compares nothing is a broken gate, not a pass
+        print(
+            "bench_check FAILED: no suites compared -- check the "
+            "--baseline/--fresh paths (fresh BENCH_*.json present? "
+            "baselines committed under benchmarks/baseline/?)"
+        )
+        return 1
+    if all_failures:
+        print(
+            f"\nbench_check FAILED: {len(all_failures)} regression(s) "
+            f"worse than {100 * args.threshold:.0f}%\n"
+        )
+        print(UPDATE_HINT)
+        return 1
+    print("bench_check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,7 @@ DOC_FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
 DOCTEST_MODULES = [
     "repro.launch.dryrun",
     "repro.launch.xct_perf",
+    "repro.kernels.traffic",
 ]
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
