@@ -1,0 +1,126 @@
+"""Reconstruction-service throughput: plan-cache amortization under a
+job mix.
+
+Drives an in-process ``repro.serve.ReconServer`` with a deterministic
+six-job traffic mix over two geometries (A cold, B cold, then four
+warm re-uses: A A B A) and reports the service-level numbers the
+ROADMAP's as-a-service story cares about:
+
+  jobs_per_s            end-to-end service throughput over the mix
+                        (machine-normalized by ``tools/bench_check.py``)
+  hit_rate              plan-cache hit rate of the mix -- DETERMINISTIC
+                        (4 hits / 6 lookups), so it is gated absolutely:
+                        any drop means the cache or the fingerprint
+                        broke, not a slow runner
+  p50/p95_first_slab_s  queue-to-first-slab latency percentiles (the
+                        progressive-preview metric; informational)
+  warm_speedup          cold vs warm queue-to-first-slab ratio -- the
+                        amortization the subsystem exists to buy
+
+Emits ``BENCH_serve.json`` via ``benchmarks.common.emit``; CI's
+bench-smoke job runs this with ``--quick`` and gates the guarded fields
+against ``benchmarks/baseline/BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.geometry import XCTGeometry
+from repro.core.partition import PartitionConfig
+from repro.core.recon import ReconConfig
+from repro.serve import JobSpec, ReconServer
+
+from .common import emit
+
+
+def _quantile(xs, q: float) -> float:
+    return float(np.quantile(np.asarray(xs, np.float64), q))
+
+
+def run(n: int = 48, iters: int = 6, quick: bool = False):
+    if quick:
+        n, iters = 32, 4
+    y_total = 8 if quick else 16
+    y_slab = y_total // 2
+    geo_a = XCTGeometry(n=n, n_angles=max(16, n // 2))
+    geo_b = XCTGeometry(n=n, n_angles=max(16, n // 2) + 16)
+    pcfg = PartitionConfig(
+        n_data=1, tile=8, rows_per_block=16, nnz_per_stage=16
+    )
+    rcfg = ReconConfig(precision="mixed", comm_mode="hier", fuse=2)
+    rng = np.random.default_rng(0)
+
+    def spec(geo, tenant):
+        sino = rng.standard_normal(
+            (geo.n_rays, y_total)
+        ).astype(np.float32)
+        return JobSpec(
+            geo=geo, sino=sino, pcfg=pcfg, rcfg=rcfg, iters=iters,
+            tenant=tenant, y_slab=y_slab,
+        )
+
+    # A cold, B cold, then warm traffic: 2 misses + 4 hits = 2/3
+    mix = [
+        spec(geo_a, "t0"), spec(geo_b, "t1"),
+        spec(geo_a, "t0"), spec(geo_a, "t2"),
+        spec(geo_b, "t1"), spec(geo_a, "t0"),
+    ]
+    workdir = tempfile.mkdtemp(prefix="bench_serve_")
+    try:
+        srv = ReconServer(2 * 2**30, workdir=workdir)
+        jobs = []
+        t0 = time.perf_counter()
+        # drain per submit: every job goes through its own cache lookup
+        # (a single drain would coalesce same-key jobs into one lookup
+        # and make hit_rate depend on arrival timing)
+        for s in mix:
+            job = srv.submit(s)
+            srv.drain()
+            jobs.append(job)
+        total = time.perf_counter() - t0
+        assert all(j.status == "done" for j in jobs), [
+            (j.status, j.error) for j in jobs
+        ]
+
+        st = srv.stats()
+        firsts = [j.telemetry.first_slab_seconds for j in jobs]
+        cold = [j for j in jobs if j.telemetry.plan_cold]
+        warm = [j for j in jobs if not j.telemetry.plan_cold]
+        cold_first = float(np.mean(
+            [j.telemetry.first_slab_seconds for j in cold]
+        ))
+        warm_first = float(np.mean(
+            [j.telemetry.first_slab_seconds for j in warm]
+        ))
+        emit(
+            "serve/mix6",
+            total / len(jobs) * 1e6,
+            f"jobs_per_s={len(jobs) / total:.3f} "
+            f"hit_rate={st['hit_rate']:.3f} "
+            f"builds={st['builds']} "
+            f"p50_first_slab_s={_quantile(firsts, 0.50):.3f} "
+            f"p95_first_slab_s={_quantile(firsts, 0.95):.3f} "
+            f"n_jobs={len(jobs)} y_slab={y_slab} iters={iters}",
+        )
+        emit(
+            "serve/warm_vs_cold",
+            warm_first * 1e6,
+            f"cold_first_slab_s={cold_first:.3f} "
+            f"warm_first_slab_s={warm_first:.3f} "
+            f"warm_speedup={cold_first / max(warm_first, 1e-9):.2f}x",
+        )
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

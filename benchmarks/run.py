@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   scaling_*       Fig. 12  strong / weak scaling
   convergence     Fig. 13  residual vs precision (f64 via subprocess)
   stream          Sec. III-E out-of-core: slices/s vs slab size x overlap
+  serve           reconstruction-as-a-service: jobs/s, plan-cache hit
+                  rate, queue-to-first-slab percentiles
 
 ``--quick`` shrinks problem sizes (used by CI).
 """
@@ -23,13 +25,14 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
         "--only", default=None,
-        help="comma list: spmm,recon,comms,scaling,convergence,stream",
+        help="comma list: "
+             "spmm,recon,comms,scaling,convergence,stream,serve",
     )
     args = ap.parse_args(argv)
 
     from . import (
         bench_comms, bench_convergence, bench_recon, bench_scaling,
-        bench_spmm, bench_stream, common,
+        bench_serve, bench_spmm, bench_stream, common,
     )
 
     common.reset()  # fresh BENCH_<suite>.json rows for this invocation
@@ -41,6 +44,7 @@ def main(argv=None) -> None:
         "scaling": bench_scaling.run,
         "convergence": bench_convergence.run,
         "stream": bench_stream.run,
+        "serve": bench_serve.run,
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     print("name,us_per_call,derived")

@@ -4,7 +4,7 @@
 """
 import argparse
 
-from repro.launch.serve import main as serve_main
+from repro.launch.lm_serve import main as serve_main
 
 
 def main(argv=None):

@@ -26,6 +26,8 @@ partial-data footprints is what hierarchical communication exploits).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
 
 import numpy as np
@@ -44,6 +46,7 @@ __all__ = [
     "default_socket",
     "estimate_hier_sparse",
     "exchange_volume_params",
+    "plan_key",
     "socket_chunk_layout",
 ]
 
@@ -662,6 +665,73 @@ def default_socket(p_data: int, fast: int) -> int:
     device count, else the legacy scattered layout.
     """
     return fast if fast > 1 and p_data % fast == 0 else 1
+
+
+def _key_scalar(v):
+    """Canonicalize one fingerprint value (see :func:`plan_key`)."""
+    if v is None or isinstance(v, (bool, int, str)):
+        return v
+    if isinstance(v, float):
+        # repr round-trips doubles exactly; 1.0 and 1 must not collide
+        # with each other across runs, so floats keep a "f:" tag
+        return f"f:{v!r}"
+    if isinstance(v, type) or isinstance(v, np.dtype):
+        return np.dtype(v).name  # np.int16 / "int16" / dtype -> one name
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return {
+            f.name: _key_scalar(getattr(v, f.name))
+            for f in dataclasses.fields(v)
+        }
+    raise TypeError(
+        f"plan_key cannot fingerprint {type(v).__name__}: {v!r} "
+        "(pass scalars, dtypes, or dataclasses of those)"
+    )
+
+
+def plan_key(
+    geo: XCTGeometry, cfg: PartitionConfig = PartitionConfig(), **runtime
+) -> str:
+    """Stable fingerprint of everything that shapes a compiled plan.
+
+    Two jobs share a cold path -- partition + winseg build + kernel
+    compile -- exactly when they agree on (a) the scan geometry, (b) the
+    decomposition/block layout (``PartitionConfig``: P_d, tile, R, K,
+    the index/value dtype packing, socket layout) and (c) whichever
+    runtime knobs the caller folds in (``repro.serve`` passes the full
+    ``ReconConfig``: precision ladder, comm mode, fuse, staging/DMA
+    mode).  ``plan_key`` hashes all of it into one short stable string
+    so a plan cache can amortize the cold path across jobs
+    (docs/architecture.md, "Reconstruction-as-a-service").
+
+    Properties the serve layer relies on (pinned in
+    ``tests/test_partition.py``):
+
+      * deterministic across processes (no ``hash()`` randomization --
+        the digest is sha256 over a canonical JSON encoding);
+      * kwargs order never matters (``precision=..., comm_mode=...`` ==
+        ``comm_mode=..., precision=...``: keys are sorted);
+      * near-miss configs do NOT collide: a different value dtype, a
+        different socket, a different comm/dma mode each change the key;
+      * equivalent geometries DO collide (``n_det=None`` vs an explicit
+        ``n_det=n`` name the same scan, so they share a cache entry).
+
+    ``runtime`` values may be scalars, dtypes, or dataclasses of those
+    (e.g. ``recon=ReconConfig(...)``); anything else raises TypeError
+    rather than fingerprinting an unstable repr.
+    """
+    record = {
+        # geometry, canonicalized: num_det resolves the n_det=None alias
+        "geo": {
+            "n": geo.n,
+            "n_angles": geo.n_angles,
+            "num_det": geo.num_det,
+            "vox": _key_scalar(float(geo.vox)),
+        },
+        "partition": _key_scalar(cfg),
+        "runtime": {k: _key_scalar(v) for k, v in runtime.items()},
+    }
+    blob = json.dumps(record, sort_keys=True, separators=(",", ":"))
+    return "xct-" + hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
 def exchange_volume_params(op: OperatorShards, topo) -> dict:

@@ -1,80 +1,24 @@
-"""Batched serving driver: prefill + decode with KV caches.
+"""Deprecated alias: the LM toy server moved to ``launch.lm_serve``.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+The ``serve`` name belongs to the reconstruction service now
+(``repro.serve.ReconServer``); this shim keeps old
+``python -m repro.launch.serve`` invocations and imports working one
+release longer.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from .lm_serve import main
 
-from ..configs import get_config
-from ..models.lm import decode_step, prefill
-from ..models.transformer import init_params
+__all__ = ["main"]
 
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(
-        args.arch, smoke=args.smoke,
-        max_cache=args.prompt_len + args.gen,
-    )
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-
-    if cfg.embed_inputs:
-        prompts = jax.random.randint(
-            key, (args.batch, args.prompt_len), 0, cfg.vocab_size
-        )
-    else:
-        prompts = jax.random.normal(
-            key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16
-        )
-
-    pf = jax.jit(lambda p, i: prefill(p, cfg, i))
-    dc = jax.jit(
-        lambda p, c, t, q: decode_step(p, cfg, c, t, q),
-        donate_argnums=(1,),
-    )
-
-    t0 = time.time()
-    last_logits, cache = pf(params, prompts)
-    tok = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t1 = time.time()
-    out_tokens = [np.asarray(tok)]
-    pos = args.prompt_len
-    for i in range(args.gen - 1):
-        step_in = (
-            tok
-            if cfg.embed_inputs
-            else jax.random.normal(
-                key, (args.batch, 1, cfg.d_model), jnp.bfloat16
-            )
-        )
-        tok, cache, _ = dc(params, cache, step_in, jnp.int32(pos))
-        out_tokens.append(np.asarray(tok))
-        pos += 1
-    jax.block_until_ready(tok)
-    t2 = time.time()
-    gen = np.concatenate(out_tokens, axis=1)
-    tput = args.batch * (args.gen - 1) / max(1e-9, t2 - t1)
-    print(f"prefill {t1-t0:.2f}s, decode {t2-t1:.2f}s "
-          f"({tput:.1f} tok/s), sample row: {gen[0][:12]}")
-    return gen
-
+warnings.warn(
+    "repro.launch.serve is deprecated: the LM toy server lives at "
+    "repro.launch.lm_serve; the reconstruction service is repro.serve",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 if __name__ == "__main__":
     main()

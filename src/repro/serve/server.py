@@ -1,0 +1,396 @@
+"""The in-process reconstruction service: submit jobs, drain batches.
+
+``ReconServer`` ties the serve subsystem together around the machinery
+the rest of the repo already trusts:
+
+* **submit** fingerprints the job (``core.partition.plan_key``), prices
+  it against the memory budget (``serve.admission``, allocation-free via
+  ``estimate_plan``) and either queues it or rejects it with the reason.
+* **step** forms one batch (``serve.batching``: priority + per-tenant
+  fairness, then same-key coalescing under the budget), resolves the
+  plan through the byte-bounded LRU ``serve.plan_cache`` -- the cold
+  path (``build_plan`` + ``Reconstructor`` jit) runs at most once per
+  resident key -- and drains the batch's slabs round-robin through one
+  ``stream.scheduler.Prefetcher`` so every co-scheduled job streams
+  progressive previews from its first slab on.
+* Results land in per-job ``stream.SlabStore`` volumes (atomic shard
+  publishes -- a preview path is always a complete, memmap-able slab),
+  with per-request queue/load/upload/solve telemetry.
+
+Per-slab solves go through the same ``Reconstructor.reconstruct`` the
+streaming driver uses, on independent slices, so a job's volume is
+bit-exact vs running it alone through ``stream.reconstruct_streaming``
+regardless of what it was batched or interleaved with (pinned by
+``tests/test_serve.py``).
+
+Synchronous use::
+
+    srv = ReconServer(mem_budget=2 * 2**30, workdir=tmp)
+    job = srv.submit(JobSpec(geo=geo, sino=sino))
+    srv.drain()                      # run queued batches to completion
+    vol = job.volume.to_array()      # [n_vox, Y]
+
+Background use: ``start()`` spins a scheduler thread; ``submit`` wakes
+it; ``job.wait()`` joins on completion; ``stop()`` shuts it down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from ..core.partition import PartitionConfig, build_plan, plan_key
+from ..core.recon import ReconConfig, Reconstructor
+from ..dist import Topology
+from ..stream.scheduler import Prefetcher, PrefetchError
+from ..stream.store import SlabStore
+from .admission import AdmissionController
+from .batching import fair_order, form_batch, interleave_slabs
+from .jobs import Job, JobSpec
+from .plan_cache import PlanCache
+
+__all__ = ["ReconServer"]
+
+
+class ReconServer:
+    """Multi-tenant reconstruction-as-a-service (in-process).
+
+    Args:
+      mem_budget: bytes the running batch may occupy (resident operator
+        + all co-scheduled slab working sets -- the admission formula).
+      workdir: directory for per-job volume stores (``job_<id>/``);
+        defaults to a fresh temp dir (kept on ``stop`` -- results live
+        there).
+      cache_bytes: plan-cache LRU bound (None = unbounded).
+      max_batch: most jobs coalesced into one batch.
+      fair_share: same-key jobs the fair-share slab sizing leaves room
+        for (``admission.AdmissionController``).
+      max_queue: backlog bound; submits past it are rejected.
+      overlap: prefetch depth-1 staging overlap while draining slabs
+        (the streaming driver's default; ``False`` degrades to a
+        synchronous loop for debugging).
+      on_preview: ``callable(job, SlabPreview)`` fired per published
+        slab, while the job is still running.
+    """
+
+    def __init__(
+        self,
+        mem_budget: int,
+        *,
+        workdir: str | None = None,
+        cache_bytes: int | None = None,
+        max_batch: int = 4,
+        fair_share: int = 2,
+        max_queue: int | None = None,
+        overlap: bool = True,
+        on_preview=None,
+    ):
+        self.workdir = workdir or tempfile.mkdtemp(prefix="repro_serve_")
+        os.makedirs(self.workdir, exist_ok=True)
+        self.admission = AdmissionController(
+            mem_budget,
+            # in-process serving solves on the default 1-device mesh:
+            # meshless accounting topology => granule = fuse
+            Topology.from_sizes([("model", 1, "ici")]),
+            fair_share=fair_share,
+            max_queue=max_queue,
+        )
+        self.cache = PlanCache(capacity_bytes=cache_bytes)
+        self.max_batch = int(max_batch)
+        self.overlap = bool(overlap)
+        self._on_preview = on_preview
+        self._lock = threading.Lock()
+        self._queue: list[Job] = []
+        self._jobs: dict[int, Job] = {}
+        self._costs: dict[int, object] = {}  # job id -> JobCost
+        self.served: dict[str, float] = {}  # tenant -> slices solved
+        self.batches: list[dict] = []  # {"key", "jobs", "cold"}
+        self._next_id = 0
+        self._rejected = 0
+        self._completed = 0
+        self._failed = 0
+        self._thread: threading.Thread | None = None
+        self._stop_evt = threading.Event()
+        self._wake = threading.Event()
+
+    # ------------------------------------------------------------------ #
+    # intake
+    # ------------------------------------------------------------------ #
+    def submit(self, spec: JobSpec) -> Job:
+        """Price + enqueue one job; returns it (possibly ``rejected``).
+
+        Rejection is an admission decision, not an exception: the job
+        comes back terminal with ``status == "rejected"`` and the
+        pricing error in ``job.error``, so a tenant script can react
+        without try/except around every submit.
+        """
+        pcfg = spec.pcfg if spec.pcfg is not None else PartitionConfig()
+        rcfg = spec.rcfg if spec.rcfg is not None else ReconConfig()
+        spec = dataclasses.replace(spec, pcfg=pcfg, rcfg=rcfg)
+        key = plan_key(spec.geo, pcfg, recon=rcfg)
+        with self._lock:
+            job = Job(self._next_id, spec, key,
+                      on_preview=self._on_preview)
+            self._next_id += 1
+            self._jobs[job.id] = job
+
+        rows = (
+            spec.sino.rows if hasattr(spec.sino, "rows")
+            else np.asarray(spec.sino).shape[0]
+        )
+        if rows != spec.geo.n_rays:
+            job._transition(
+                "rejected",
+                error=f"sinogram has {rows} rays, geometry wants "
+                      f"{spec.geo.n_rays}",
+            )
+            self._rejected += 1
+            return job
+        try:
+            # price against the real plan when one is already cached
+            # (peek: pricing must not count as a serving hit)
+            if spec.n_slices % rcfg.fuse:
+                raise ValueError(
+                    f"n_slices={spec.n_slices} not a multiple of the "
+                    f"solve granule fuse={rcfg.fuse}"
+                )
+            entry = self.cache.peek(key)
+            cost = self.admission.price(
+                spec.geo, pcfg, rcfg, spec.n_slices,
+                y_slab=spec.y_slab,
+                plan=entry.plan if entry is not None else None,
+            )
+        except ValueError as e:
+            job._transition("rejected", error=str(e))
+            self._rejected += 1
+            return job
+        with self._lock:
+            if self.admission.queue_full(len(self._queue)):
+                job._transition(
+                    "rejected",
+                    error=f"queue full ({len(self._queue)} >= "
+                          f"{self.admission.max_queue})",
+                )
+                self._rejected += 1
+                return job
+            self._costs[job.id] = cost
+            self._queue.append(job)
+        self._wake.set()
+        return job
+
+    def job(self, job_id: int) -> Job:
+        return self._jobs[job_id]
+
+    # ------------------------------------------------------------------ #
+    # scheduling
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """Form and run one batch; returns how many jobs it drained."""
+        with self._lock:
+            if not self._queue:
+                return 0
+            ordered = fair_order(self._queue, self.served)
+            batch = form_batch(
+                ordered, self._costs, self.admission, self.max_batch
+            )
+            for job in batch:
+                self._queue.remove(job)
+        if not batch:
+            return 0
+        self._run_batch(batch)
+        return len(batch)
+
+    def drain(self) -> int:
+        """Run batches until the queue is empty; returns jobs drained."""
+        n = 0
+        while True:
+            k = self.step()
+            if not k:
+                return n
+            n += k
+
+    def _run_batch(self, batch: list[Job]):
+        key = batch[0].plan_key
+        for job in batch:  # queue wait ends when the batch is picked
+            job._transition("running")
+            job.telemetry.queue_seconds = (
+                time.perf_counter() - job.submit_t
+            )
+        entry, hit = self.cache.get_or_build(
+            key, lambda: self._build(batch[0])
+        )
+        self.batches.append(
+            {"key": key, "jobs": [j.id for j in batch], "cold": not hit}
+        )
+        for job in batch:
+            job.telemetry.plan_cold = not hit
+        self.cache.pin(key)
+        try:
+            self._execute(entry, batch)
+        finally:
+            self.cache.unpin(key)
+
+    def _build(self, job: Job):
+        """The cold path: partition + winseg tables + solver (compiles
+        lazily on first solve, memoized in ``Reconstructor._fns``)."""
+        spec = job.spec
+        plan = build_plan(spec.geo, spec.pcfg)
+        rec = Reconstructor(plan, cfg=spec.rcfg)
+        sb = rec.policy.storage_bytes
+        nbytes = (
+            plan.proj.hbm_bytes(value_bytes=sb)
+            + plan.back.hbm_bytes(value_bytes=sb)
+        )
+        return plan, rec, nbytes
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def _execute(self, entry, batch: list[Job]):
+        rec = entry.rec
+        per_job_slabs = []
+        pending: dict[int, int] = {}
+        for job in batch:
+            cost = self._costs[job.id]
+            job.y_slab = cost.y_slab
+            job.volume = SlabStore.create(
+                os.path.join(self.workdir, f"job_{job.id:05d}"),
+                rows=job.spec.geo.n_vox,
+                n_slices=job.spec.n_slices,
+                slab=cost.y_slab,
+                dtype=np.float32,
+            )
+            job.resnorms = np.zeros(
+                (job.spec.iters, job.spec.n_slices), np.float32
+            )
+            slabs = job.volume.slabs()
+            pending[job.id] = len(slabs)
+            per_job_slabs.append(slabs)
+
+        # round-robin across jobs: every co-scheduled job sees its
+        # first preview after ~one slab time
+        tasks = [
+            (batch[ji], rng)
+            for ji, rng in interleave_slabs(per_job_slabs)
+        ]
+
+        def fetch(task):
+            job, (j0, j1) = task
+            return job.spec.read_slab(j0, j1)
+
+        while tasks:
+            pre = Prefetcher(
+                fetch, tasks, depth=1, enabled=self.overlap,
+                stage=rec.stage_sino,
+            )
+            consumed = 0
+            try:
+                for pos, (task, staged) in enumerate(pre):
+                    job, (j0, j1) = task
+                    t1 = time.perf_counter()
+                    x, r = rec.reconstruct(
+                        staged, iters=job.spec.iters
+                    )
+                    solve_s = time.perf_counter() - t1
+                    path = job.volume.write(j0, np.asarray(x))
+                    job.resnorms[:, j0:j1] = r
+                    tm = pre.times.get(pos, {})
+                    job.telemetry.load_seconds += tm.get("load", 0.0)
+                    job.telemetry.upload_seconds += tm.get("stage", 0.0)
+                    job.telemetry.solve_seconds += solve_s
+                    job.publish_preview(j0, j1, path)
+                    with self._lock:
+                        self.served[job.spec.tenant] = (
+                            self.served.get(job.spec.tenant, 0.0)
+                            + (j1 - j0)
+                        )
+                    pending[job.id] -= 1
+                    if pending[job.id] == 0:
+                        job.telemetry.total_seconds = (
+                            time.perf_counter() - job.submit_t
+                        )
+                        job._transition("done")
+                        self._completed += 1
+                    consumed = pos + 1
+            except PrefetchError as e:
+                # the failing fetch/stage names its job; everything
+                # already yielded for other jobs is safely on disk
+                bad, _ = e.item
+                self._fail(bad, f"slab load failed: {e}")
+                tasks = [
+                    t for t in tasks[e.index + 1:]
+                    if t[0].status == "running"
+                ]
+                continue
+            except Exception as e:  # noqa: BLE001 - solve/write failure
+                bad = tasks[consumed][0]
+                self._fail(bad, f"{type(e).__name__}: {e}")
+                tasks = [
+                    t for t in tasks[consumed + 1:]
+                    if t[0].status == "running"
+                ]
+                continue
+            break
+
+    def _fail(self, job: Job, msg: str):
+        job._transition("failed", error=msg)
+        self._failed += 1
+
+    # ------------------------------------------------------------------ #
+    # background mode
+    # ------------------------------------------------------------------ #
+    def start(self):
+        """Run the scheduler on a daemon thread; ``submit`` wakes it."""
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop_evt.clear()
+        self._thread = threading.Thread(
+            target=self._loop, name="repro-serve", daemon=True
+        )
+        self._thread.start()
+
+    def _loop(self):
+        while not self._stop_evt.is_set():
+            if not self.step():
+                self._wake.wait(0.05)
+                self._wake.clear()
+
+    def stop(self, drain: bool = True):
+        """Stop the scheduler thread (after ``drain``-ing by default).
+
+        Job volumes stay on disk under ``workdir`` -- results outlive
+        the server.
+        """
+        if self._thread is None:
+            return
+        if drain:
+            while True:
+                with self._lock:
+                    empty = not self._queue
+                if empty:
+                    break
+                time.sleep(0.01)
+        self._stop_evt.set()
+        self._wake.set()
+        self._thread.join()
+        self._thread = None
+
+    # ------------------------------------------------------------------ #
+    # observability
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        s = self.cache.stats()
+        s.update(
+            submitted=self._next_id,
+            rejected=self._rejected,
+            completed=self._completed,
+            failed=self._failed,
+            queued=len(self._queue),
+            batches=len(self.batches),
+            hit_rate=self.cache.hit_rate,
+        )
+        return s

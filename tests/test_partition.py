@@ -219,3 +219,78 @@ def test_hbm_bytes_counts_resident_operator_only(small_system):
         op.winmap.size + op.winsegs.size + op.row_map.size
     ) * 4
     assert op.hbm_bytes() == want
+
+
+# --------------------------------------------------------------------- #
+# plan_key: the serve layer's cache fingerprint
+# --------------------------------------------------------------------- #
+def test_plan_key_deterministic_and_kwargs_order_free():
+    from repro.core.partition import plan_key
+    from repro.core.recon import ReconConfig
+
+    geo = XCTGeometry(n=32, n_angles=48)
+    cfg = PartitionConfig(n_data=2, tile=8)
+    a = plan_key(geo, cfg, precision="mixed", comm_mode="hier")
+    b = plan_key(geo, cfg, comm_mode="hier", precision="mixed")
+    assert a == b  # kwargs reordering must not change the key
+    assert a.startswith("xct-") and len(a) == 4 + 16
+    # dataclasses fingerprint by field values, not identity
+    assert plan_key(geo, cfg, recon=ReconConfig(fuse=4)) == \
+        plan_key(geo, PartitionConfig(n_data=2, tile=8),
+                 recon=ReconConfig(fuse=4))
+
+
+def test_plan_key_equivalent_geometries_collide():
+    from repro.core.partition import plan_key
+
+    # n_det=None is an alias for n_det=n: same scan, same cold path
+    assert plan_key(XCTGeometry(n=32, n_angles=48)) == \
+        plan_key(XCTGeometry(n=32, n_angles=48, n_det=32))
+    # dtype spellings name the same packing
+    assert plan_key(XCTGeometry(32, 48),
+                    PartitionConfig(value_dtype=np.float16)) == \
+        plan_key(XCTGeometry(32, 48),
+                 PartitionConfig(value_dtype=np.dtype("float16")))
+
+
+def test_plan_key_near_misses_do_not_collide():
+    from repro.core.partition import plan_key
+    from repro.core.recon import ReconConfig
+
+    geo = XCTGeometry(n=32, n_angles=48)
+    base = plan_key(geo, PartitionConfig(),
+                    recon=ReconConfig(precision="mixed"))
+    others = [
+        plan_key(XCTGeometry(n=32, n_angles=64), PartitionConfig(),
+                 recon=ReconConfig(precision="mixed")),
+        plan_key(XCTGeometry(n=32, n_angles=48, vox=2.0),
+                 PartitionConfig(), recon=ReconConfig(precision="mixed")),
+        plan_key(geo, PartitionConfig(n_data=2),
+                 recon=ReconConfig(precision="mixed")),
+        plan_key(geo, PartitionConfig(rows_per_block=64),
+                 recon=ReconConfig(precision="mixed")),
+        plan_key(geo, PartitionConfig(value_dtype=np.float32),
+                 recon=ReconConfig(precision="mixed")),
+        plan_key(geo, PartitionConfig(socket=2),
+                 recon=ReconConfig(precision="mixed")),
+        plan_key(geo, PartitionConfig(),
+                 recon=ReconConfig(precision="half")),
+        plan_key(geo, PartitionConfig(),
+                 recon=ReconConfig(precision="mixed", comm_mode="rs")),
+        plan_key(geo, PartitionConfig(),
+                 recon=ReconConfig(precision="mixed", dma="per_row")),
+        plan_key(geo, PartitionConfig(),
+                 recon=ReconConfig(precision="mixed", fuse=4)),
+    ]
+    keys = [base] + others
+    assert len(set(keys)) == len(keys), keys
+
+
+def test_plan_key_rejects_unstable_values():
+    from repro.core.partition import plan_key
+
+    geo = XCTGeometry(n=32, n_angles=48)
+    with pytest.raises(TypeError, match="cannot fingerprint"):
+        plan_key(geo, PartitionConfig(), junk=object())
+    # int 1 and float 1.0 must not collide (dtype-ladder style knobs)
+    assert plan_key(geo, x=1) != plan_key(geo, x=1.0)

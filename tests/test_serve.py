@@ -1,0 +1,356 @@
+"""repro.serve acceptance: plan cache, admission, batching, previews.
+
+Pins the ISSUE 6 criteria:
+
+  * warm path: a second same-geometry job performs ZERO partition or
+    winseg builds (cache counters) and its queue-to-first-slab is
+    strictly below the cold job's;
+  * three concurrent jobs batched through one server each reconstruct
+    bit-exact vs running the same job alone through
+    ``stream.reconstruct_streaming``;
+  * admission rejects work that can never fit and bounds the backlog;
+  * a failing job is contained: its batch mates still complete.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.partition import PartitionConfig, build_plan
+from repro.core.recon import ReconConfig, Reconstructor
+from repro.data.phantom import phantom_slices, simulate_measurements
+from repro.serve import (
+    AdmissionController,
+    Job,
+    JobCost,
+    JobSpec,
+    PlanCache,
+    ReconServer,
+    fair_order,
+    form_batch,
+)
+from repro.stream import SlabStore, reconstruct_streaming
+
+Y = 8  # slices per job (multiple of fuse=2)
+ITERS = 4
+Y_SLAB = 4
+BUDGET = 2 * 2**30
+
+
+@pytest.fixture(scope="module")
+def geo(small_system):
+    return small_system[0]
+
+
+@pytest.fixture(scope="module")
+def pcfg():
+    return PartitionConfig(
+        n_data=1, tile=4, rows_per_block=16, nnz_per_stage=16
+    )
+
+
+@pytest.fixture(scope="module")
+def rcfg():
+    return ReconConfig(precision="single", comm_mode="rs", fuse=2)
+
+
+@pytest.fixture(scope="module")
+def sinos(small_system):
+    geo, a, _ = small_system
+    out = []
+    for seed in (11, 12, 13):
+        x = phantom_slices(geo.n, Y, seed=seed)
+        out.append(simulate_measurements(a, x, noise=0.01, seed=seed))
+    return out
+
+
+@pytest.fixture(scope="module")
+def reference(geo, pcfg, rcfg, sinos, tmp_path_factory):
+    """Each job's volume, run ALONE through the streaming driver."""
+    plan = build_plan(geo, pcfg)
+    rec = Reconstructor(plan, cfg=rcfg)
+    vols = []
+    for i, sino in enumerate(sinos):
+        tmp = tmp_path_factory.mktemp(f"ref{i}")
+        store = SlabStore.from_array(
+            str(tmp / "sino"), sino, slab=Y_SLAB
+        )
+        res = reconstruct_streaming(
+            rec, store, str(tmp / "vol"), iters=ITERS, y_slab=Y_SLAB
+        )
+        vols.append(res.volume.to_array())
+    return vols
+
+
+def _spec(geo, sino, pcfg, rcfg, **kw):
+    kw.setdefault("iters", ITERS)
+    kw.setdefault("y_slab", Y_SLAB)
+    return JobSpec(geo=geo, sino=sino, pcfg=pcfg, rcfg=rcfg, **kw)
+
+
+# --------------------------------------------------------------------- #
+# the warm path (tentpole acceptance)
+# --------------------------------------------------------------------- #
+def test_warm_job_skips_cold_path_and_is_faster(
+    geo, pcfg, rcfg, sinos, tmp_path
+):
+    srv = ReconServer(BUDGET, workdir=str(tmp_path))
+    cold = srv.submit(_spec(geo, sinos[0], pcfg, rcfg))
+    assert srv.drain() == 1 and cold.status == "done"
+    assert srv.cache.stats()["builds"] == 1
+    assert cold.telemetry.plan_cold
+
+    warm = srv.submit(_spec(geo, sinos[1], pcfg, rcfg, tenant="b"))
+    assert warm.plan_key == cold.plan_key
+    assert srv.drain() == 1 and warm.status == "done"
+    st = srv.cache.stats()
+    # ZERO new partition/winseg builds: the cache counters are the proof
+    assert st["builds"] == 1 and st["misses"] == 1 and st["hits"] == 1
+    assert not warm.telemetry.plan_cold
+    # and the warm job reaches its first slab strictly sooner
+    assert (
+        warm.telemetry.first_slab_seconds
+        < cold.telemetry.first_slab_seconds
+    )
+
+
+def test_concurrent_jobs_bit_exact_vs_streaming(
+    geo, pcfg, rcfg, sinos, reference, tmp_path
+):
+    events = []
+    srv = ReconServer(
+        BUDGET, workdir=str(tmp_path),
+        on_preview=lambda job, pv: events.append(
+            (job.id, job.status, pv.j0, pv.j1)
+        ),
+    )
+    jobs = [
+        srv.submit(_spec(geo, s, pcfg, rcfg, tenant=f"t{i}"))
+        for i, s in enumerate(sinos)
+    ]
+    assert srv.drain() == 3
+    # one batch, one cold build, everything coalesced
+    assert len(srv.batches) == 1
+    assert srv.batches[0]["jobs"] == [j.id for j in jobs]
+    assert srv.cache.stats()["builds"] == 1
+    for job, ref in zip(jobs, reference):
+        assert job.status == "done"
+        np.testing.assert_array_equal(job.volume.to_array(), ref)
+        assert job.resnorms.shape == (ITERS, Y)
+    # previews streamed round-robin while every job was still running
+    assert all(status == "running" for _, status, _, _ in events)
+    first_three = [jid for jid, _, _, _ in events[:3]]
+    assert sorted(first_three) == [j.id for j in jobs]
+    # telemetry split covers the work
+    for job in jobs:
+        t = job.telemetry
+        assert t.n_slabs == Y // Y_SLAB
+        assert t.solve_seconds > 0 and t.total_seconds > 0
+
+
+def test_jobs_visible_and_volumes_on_disk(geo, pcfg, rcfg, sinos,
+                                          tmp_path):
+    srv = ReconServer(BUDGET, workdir=str(tmp_path))
+    job = srv.submit(_spec(geo, sinos[0], pcfg, rcfg))
+    srv.drain()
+    assert srv.job(job.id) is job
+    assert job.volume.complete()
+    for pv in job.previews:
+        assert os.path.exists(pv.path)  # previews ARE the shards
+    st = srv.stats()
+    assert st["completed"] == 1 and st["queued"] == 0
+
+
+# --------------------------------------------------------------------- #
+# admission control
+# --------------------------------------------------------------------- #
+def test_admission_rejects_impossible_jobs(geo, pcfg, rcfg, sinos,
+                                           tmp_path):
+    srv = ReconServer(2**20, workdir=str(tmp_path))  # 1 MiB: hopeless
+    job = srv.submit(_spec(geo, sinos[0], pcfg, rcfg, y_slab=None))
+    assert job.status == "rejected" and job.terminal
+    assert "mem_budget" in job.error
+    assert srv.stats()["rejected"] == 1
+    assert srv.cache.stats()["builds"] == 0  # pricing never builds
+
+
+def test_admission_rejects_bad_specs(geo, pcfg, rcfg, sinos, tmp_path):
+    srv = ReconServer(BUDGET, workdir=str(tmp_path))
+    wrong_rows = np.zeros((7, Y), np.float32)
+    j = srv.submit(_spec(geo, wrong_rows, pcfg, rcfg))
+    assert j.status == "rejected" and "rays" in j.error
+    odd = srv.submit(
+        _spec(geo, sinos[0][:, :5], pcfg, rcfg, y_slab=None)
+    )
+    assert odd.status == "rejected" and "granule" in odd.error
+    ragged = srv.submit(_spec(geo, sinos[0], pcfg, rcfg, y_slab=3))
+    assert ragged.status == "rejected" and "multiple" in ragged.error
+    assert srv.drain() == 0
+
+
+def test_admission_bounds_the_backlog(geo, pcfg, rcfg, sinos, tmp_path):
+    srv = ReconServer(BUDGET, workdir=str(tmp_path), max_queue=2)
+    a = srv.submit(_spec(geo, sinos[0], pcfg, rcfg))
+    b = srv.submit(_spec(geo, sinos[1], pcfg, rcfg))
+    c = srv.submit(_spec(geo, sinos[2], pcfg, rcfg))
+    assert a.status == "queued" and b.status == "queued"
+    assert c.status == "rejected" and "queue full" in c.error
+    # the queued work still runs
+    assert srv.drain() == 2
+
+
+def test_admission_fits_shares_the_operator():
+    cost = JobCost(
+        fixed_bytes=100, per_slice_bytes=2, y_slab=10, n_slices=40
+    )
+    adm = AdmissionController.__new__(AdmissionController)
+    adm.mem_budget = 150
+    assert cost.working_bytes == 20 and cost.slab_bytes == 120
+    assert cost.n_slabs == 4
+    assert adm.fits([cost, cost])  # 100 + 2*20 = 140 <= 150
+    assert not adm.fits([cost, cost, cost])  # 160 > 150
+    assert adm.fits([])
+
+
+# --------------------------------------------------------------------- #
+# batching policy (pure units)
+# --------------------------------------------------------------------- #
+def _fake_job(jid, key="k", tenant="a", priority=0):
+    spec = JobSpec(
+        geo=None, sino=np.zeros((1, 2), np.float32),
+        tenant=tenant, priority=priority,
+    )
+    return Job(jid, spec, key)
+
+
+def test_fair_order_priority_then_least_served_then_fifo():
+    jobs = [
+        _fake_job(0, tenant="greedy"),
+        _fake_job(1, tenant="greedy"),
+        _fake_job(2, tenant="new"),
+        _fake_job(3, tenant="vip", priority=5),
+    ]
+    served = {"greedy": 100.0, "new": 0.0}
+    order = [j.id for j in fair_order(jobs, served)]
+    # priority first; then the under-served tenant; FIFO within a tenant
+    assert order == [3, 2, 0, 1]
+
+
+def test_form_batch_coalesces_same_key_under_budget():
+    jobs = [
+        _fake_job(0, key="k1"),
+        _fake_job(1, key="k2"),
+        _fake_job(2, key="k1"),
+        _fake_job(3, key="k1"),
+    ]
+    costs = {
+        j.id: JobCost(
+            fixed_bytes=100, per_slice_bytes=1, y_slab=20, n_slices=20
+        )
+        for j in jobs
+    }
+    adm = AdmissionController.__new__(AdmissionController)
+    adm.mem_budget = 150  # 100 fixed + two 20-byte working sets
+    batch = form_batch(jobs, costs, adm, max_batch=4)
+    # k2 never joins a k1 batch; the third k1 job does not fit
+    assert [j.id for j in batch] == [0, 2]
+    batch2 = form_batch(jobs, costs, adm, max_batch=1)
+    assert [j.id for j in batch2] == [0]
+
+
+def test_priority_orders_real_batches(geo, pcfg, rcfg, sinos, tmp_path):
+    srv = ReconServer(BUDGET, workdir=str(tmp_path), max_batch=2)
+    lo = [
+        srv.submit(_spec(geo, sinos[i], pcfg, rcfg)) for i in range(2)
+    ]
+    hi = srv.submit(
+        _spec(geo, sinos[2], pcfg, rcfg, tenant="vip", priority=9)
+    )
+    assert srv.drain() == 3
+    # the priority job leads the first batch despite submitting last
+    assert srv.batches[0]["jobs"][0] == hi.id
+    assert {j.id for j in lo} == set(
+        srv.batches[0]["jobs"][1:] + srv.batches[1]["jobs"]
+    )
+
+
+# --------------------------------------------------------------------- #
+# plan cache (pure units)
+# --------------------------------------------------------------------- #
+def test_plan_cache_lru_evicts_by_bytes():
+    cache = PlanCache(capacity_bytes=100)
+    e1, hit = cache.get_or_build("a", lambda: (1, 1, 60))
+    assert not hit and cache.bytes == 60
+    cache.get_or_build("b", lambda: (2, 2, 60))  # evicts a (LRU)
+    assert "a" not in cache and "b" in cache
+    assert cache.stats()["evictions"] == 1
+    # rebuilding a counts a fresh miss + build
+    cache.get_or_build("a", lambda: (1, 1, 60))
+    assert cache.stats()["builds"] == 3 and cache.hits == 0
+    _, hit = cache.get_or_build("a", lambda: (1, 1, 60))
+    assert hit and cache.hits == 1 and cache.hit_rate == 0.25
+
+
+def test_plan_cache_pin_blocks_eviction():
+    cache = PlanCache(capacity_bytes=100)
+    cache.get_or_build("a", lambda: (1, 1, 60))
+    cache.pin("a")
+    cache.get_or_build("b", lambda: (2, 2, 60))  # over budget, a pinned
+    assert "a" in cache and "b" in cache  # deferred, not dropped
+    cache.unpin("a")  # deferred eviction lands now ("a" is LRU)
+    assert "a" not in cache and "b" in cache
+    assert cache.peek("zzz") is None
+    # peek counts nothing
+    before = cache.stats()
+    cache.peek("b")
+    assert cache.stats() == before
+
+
+def test_plan_cache_single_entry_never_evicts_its_own_key():
+    cache = PlanCache(capacity_bytes=10)  # smaller than any entry
+    entry, _ = cache.get_or_build("a", lambda: (1, 1, 60))
+    assert "a" in cache  # degrade to rebuild-every-time, not refusal
+    cache.get_or_build("b", lambda: (2, 2, 60))
+    assert "b" in cache and "a" not in cache
+
+
+# --------------------------------------------------------------------- #
+# failure containment + background mode
+# --------------------------------------------------------------------- #
+def test_failed_job_does_not_sink_its_batch(geo, pcfg, rcfg, sinos,
+                                            tmp_path):
+    # a sinogram store missing its second shard: the first slab solves,
+    # the second fetch raises -> that job fails, its batch mate finishes
+    holey = SlabStore.create(
+        str(tmp_path / "holey"), geo.n_rays, Y, Y_SLAB
+    )
+    holey.write(0, sinos[0][:, :Y_SLAB])
+    srv = ReconServer(BUDGET, workdir=str(tmp_path / "srv"))
+    bad = srv.submit(_spec(geo, holey, pcfg, rcfg))
+    good = srv.submit(_spec(geo, sinos[1], pcfg, rcfg, tenant="b"))
+    assert srv.drain() == 2
+    assert bad.status == "failed" and "slab load failed" in bad.error
+    assert len(bad.previews) == 1  # the slab that did land is published
+    assert good.status == "done" and good.volume.complete()
+    assert srv.stats()["failed"] == 1 and srv.stats()["completed"] == 1
+
+
+def test_background_server_drains_submits(geo, pcfg, rcfg, sinos,
+                                          tmp_path):
+    srv = ReconServer(BUDGET, workdir=str(tmp_path))
+    srv.start()
+    with pytest.raises(RuntimeError, match="already started"):
+        srv.start()
+    try:
+        jobs = [
+            srv.submit(_spec(geo, s, pcfg, rcfg)) for s in sinos[:2]
+        ]
+        for j in jobs:
+            assert j.wait(timeout=300)
+            assert j.status == "done"
+    finally:
+        srv.stop()
+    assert srv.stats()["completed"] == 2
+    srv.stop()  # idempotent
+    assert threading.active_count() >= 1  # no leaked scheduler thread

@@ -354,3 +354,40 @@ def test_streaming_guards(rec, sino_store, tmp_path):
             rec, bad, str(tmp_path / "v"), iters=2, y_slab=2
         )
     assert os.path.isdir(sino_store.directory)
+
+
+def test_slab_store_concurrent_range_reads(tmp_path):
+    """Memmap-backed range reads are safe under concurrency: two threads
+    reading overlapping ranges of the same store must both see exactly
+    the published bytes (the serve layer streams previews off shards
+    other readers may be scanning)."""
+    import threading
+
+    rng = np.random.default_rng(3)
+    arr = rng.standard_normal((17, 12)).astype(np.float32)
+    store = SlabStore.from_array(str(tmp_path / "c"), arr, slab=4)
+
+    ranges = [(0, 8), (4, 12), (2, 10), (0, 12)]
+    results = {}
+    errors = []
+
+    def reader(tid, j0, j1):
+        try:
+            acc = [store.read(j0, j1) for _ in range(20)]
+            for a in acc[1:]:  # every re-read identical
+                np.testing.assert_array_equal(acc[0], a)
+            results[tid] = acc[0]
+        except Exception as e:  # noqa: BLE001
+            errors.append((tid, e))
+
+    threads = [
+        threading.Thread(target=reader, args=(i, j0, j1))
+        for i, (j0, j1) in enumerate(ranges)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    for i, (j0, j1) in enumerate(ranges):
+        np.testing.assert_array_equal(results[i], arr[:, j0:j1])

@@ -68,7 +68,7 @@ def test_train_driver_end_to_end(tmp_path):
 
 
 def test_serve_driver_end_to_end():
-    from repro.launch.serve import main
+    from repro.launch.lm_serve import main
 
     gen = main([
         "--arch", "smollm-135m", "--smoke", "--batch", "2",

@@ -42,13 +42,19 @@ import sys
 GUARDED_FIELDS = {
     "ai": ("up", "absolute"),
     "slices_per_s": ("up", "normalized"),
+    # serve suite: hit_rate is deterministic (fixed six-job mix), so a
+    # drop means the plan cache or fingerprint broke -- gate absolutely;
+    # jobs_per_s is wall-clock throughput -- machine-normalize it
+    "hit_rate": ("up", "absolute"),
+    "jobs_per_s": ("up", "normalized"),
 }
 
 UPDATE_HINT = """\
 If this regression is intentional (model change, re-baselined bench),
 refresh the committed baseline and commit it:
 
-  PYTHONPATH=src python -m benchmarks.run --quick --only spmm,comms,stream
+  PYTHONPATH=src python -m benchmarks.run --quick \\
+      --only spmm,comms,stream,serve
   cp BENCH_*.json benchmarks/baseline/
   git add benchmarks/baseline
 """

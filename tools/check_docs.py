@@ -33,6 +33,8 @@ DOCTEST_MODULES = [
     "repro.launch.dryrun",
     "repro.launch.xct_perf",
     "repro.kernels.traffic",
+    "repro.serve.admission",
+    "repro.serve.batching",
 ]
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
