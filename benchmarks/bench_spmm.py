@@ -26,7 +26,13 @@ import numpy as np
 
 from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import PartitionConfig, build_plan
-from repro.kernels.ops import apply_operator, segment_histogram
+from repro.kernels.ops import (
+    apply_operator,
+    dma_issue_count,
+    segment_histogram,
+    sort_segments_by_class,
+    winmap_segments,
+)
 from repro.kernels.traffic import spmm_traffic
 
 from .common import emit, timeit
@@ -36,16 +42,102 @@ HBM = 819e9
 
 
 def _seg_stats(op):
-    """Measured segments-per-stage mean + length histogram of a shard."""
+    """Measured DMA statistics of a shard's winmap run-length tables.
+
+    Returns ``(per_stage_mean, mean_len, issues, hist_tok)``:
+    segments-per-stage mean (what the traffic model consumes), mean
+    copy LENGTH in winmap entries per issued copy (the ``segs_mean``
+    column the CI gate guards upward -- longer runs = better
+    coalescing), the total issue count of device 0's shard
+    (``dma_issues``, guarded downward), and the length histogram.
+    """
     segs = op.winsegs[0]  # [B, S, NSEG, 3] of device 0
     per_stage = (segs[..., 2] > 0).sum(axis=-1)  # [B, S]
+    issues = dma_issue_count(segs)
+    mean_len = op.winmap[0].size / max(issues, 1)
     hist = segment_histogram(segs)
     # leading "L" keeps benchmarks.common._parse_derived from mangling
     # the token into a float
     hist_tok = "|".join(
         f"L{ln}:{ct}" for ln, ct in sorted(hist.items())
     )
-    return float(per_stage.mean()), hist_tok
+    return float(per_stage.mean()), float(mean_len), issues, hist_tok
+
+
+def calibrate_per_copy_overhead(
+    buf: int = 256, b: int = 4, s: int = 2, r: int = 32, k: int = 32,
+    f: int = 8, reps: int = 3,
+):
+    """Measure PER_COPY_OVERHEAD_S with a controlled micro-sweep.
+
+    Two synthetic winmaps with IDENTICAL shape and byte volume but
+    opposite run structure drive the same fused kernel: ``contig``
+    (arange -> a handful of power-of-two runs) vs ``strided``
+    (lo/hi interleave -> every run is length 1, ~BUF issues per
+    window).  Same bytes moved, so the wall-clock delta divided by the
+    issue-count delta isolates the fixed cost of issuing one copy:
+
+        per_copy_overhead = (t_hi - t_lo) / (issues_hi - issues_lo)
+
+    On a real accelerator this calibrates the DMA-engine dispatch cost
+    the traffic model's constant stands in for; under Pallas interpret
+    mode (any CPU run) the copies are emulated element loops, so the
+    number is an *emulator* artifact -- it is still returned (the
+    calibration plumbing is exercised end to end, and the autotuner's
+    passport records it) but tagged ``overhead_source=
+    "measured-interpret"``, and the traffic model is told timings were
+    taken under interpret so it can warn against ranking dma modes on
+    them (``spmm_traffic(..., interpret_timed=True)``).
+
+    Returns a dict with ``per_copy_overhead_s``, ``overhead_source``,
+    and the raw sweep points.
+    """
+    import jax
+
+    rng = np.random.default_rng(0)
+    inds = jnp.asarray(
+        rng.integers(0, buf, size=(b, s, r, k)).astype(np.int16)
+    )
+    vals = jnp.asarray(
+        rng.random(size=(b, s, r, k)).astype(np.float16)
+    )
+    x = jnp.asarray(rng.normal(size=(buf, f)).astype(np.float32))
+    contig = np.broadcast_to(
+        np.arange(buf, dtype=np.int32), (b, s, buf)
+    ).copy()
+    half = buf // 2
+    strided = np.empty(buf, np.int32)
+    strided[0::2] = np.arange(half, dtype=np.int32)
+    strided[1::2] = half + np.arange(buf - half, dtype=np.int32)
+    strided = np.broadcast_to(strided, (b, s, buf)).copy()
+    pts = {}
+    for tag, wm in (("contig", contig), ("strided", strided)):
+        segs, off = sort_segments_by_class(winmap_segments(wm), buf)
+        fn = jax.jit(
+            lambda xx, i=inds, v=vals, w=jnp.asarray(wm),
+            sg=jnp.asarray(segs), so=jnp.asarray(off):
+            apply_operator(i, v, w, xx, staging="fused",
+                           dma="coalesced", winsegs=sg, segoff=so)
+        )
+        pts[tag] = {
+            "issues": dma_issue_count(segs),
+            "seconds": timeit(fn, x, reps=reps),
+        }
+    d_issues = pts["strided"]["issues"] - pts["contig"]["issues"]
+    d_t = pts["strided"]["seconds"] - pts["contig"]["seconds"]
+    overhead = max(d_t, 0.0) / max(d_issues, 1)
+    interpret = jax.default_backend() not in ("tpu", "gpu")
+    if interpret:
+        # fires the shared model's interpret-timing warning exactly
+        # once per calibration: these seconds must not rank dma modes
+        spmm_traffic(b, s, r, k, buf, f, interpret_timed=True)
+    return {
+        "per_copy_overhead_s": float(overhead),
+        "overhead_source": (
+            "measured-interpret" if interpret else "measured"
+        ),
+        **{f"{t}_{m}": pts[t][m] for t in pts for m in pts[t]},
+    }
 
 
 def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
@@ -63,7 +155,8 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
     vals = jnp.asarray(op.vals[0])
     winmap = jnp.asarray(op.winmap[0])
     winsegs = jnp.asarray(op.winsegs[0])
-    segs_mean, segs_hist = _seg_stats(op)
+    segoff = jnp.asarray(op.segoff[0])
+    segs_stage, segs_mean, _, segs_hist = _seg_stats(op)
     _, b, s, r, k = op.inds.shape
     buf = op.winmap.shape[-1]
     rng = np.random.default_rng(0)
@@ -96,17 +189,17 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
             for tag, staging, dma in paths:
                 fn = jax.jit(
                     lambda xx, i=inds, v=vals, w=winmap, sg=winsegs,
-                    sd=sdt, cd=cdt, st=staging, dm=dma:
+                    so=segoff, sd=sdt, cd=cdt, st=staging, dm=dma:
                     apply_operator(i, v, w, xx, storage_dtype=sd,
                                    compute_dtype=cd, staging=st,
-                                   dma=dm, winsegs=sg)
+                                   dma=dm, winsegs=sg, segoff=so)
                 )
                 t = timeit(fn, x, reps=3 if not quick else 1)
                 tr = spmm_traffic(
                     b, s, r, k, buf, f,
                     storage_bytes=jnp.dtype(sdt).itemsize,
                     staging=staging, dma=dma,
-                    segments_per_stage=segs_mean,
+                    segments_per_stage=segs_stage,
                 )
                 flops = tr["flops"]
                 if base_t is None:

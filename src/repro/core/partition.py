@@ -69,6 +69,17 @@ class PartitionConfig:
     # dedup actually bites.  Must equal the topology's fast-level size
     # (or 1 for the legacy identity layout).
     socket: int = 1
+    # Window slot assignment (docs/architecture.md "Slot reordering"):
+    #   "runs"        (default) stage membership by run-extension over the
+    #                 row-block's sorted column union -- each stage's
+    #                 window is a *contiguous* chunk of the union, so
+    #                 winmap entries form long consecutive-source runs and
+    #                 the coalesced DMA path issues few large copies;
+    #   "first_seen"  the legacy CSR-position layout (stage = slot index
+    #                 // K), kept as the A/B baseline: stage windows
+    #                 sample strided chunks of every row, fragmenting the
+    #                 union (92% length-1 segments at bench scale).
+    slot_order: str = "runs"
 
 
 @dataclasses.dataclass
@@ -98,11 +109,20 @@ class OperatorShards:
                                   staged window tensor exists in HBM)
       winsegs    [P, B, S, NSEG, 3]  run-length DMA segments
                                   ``{src_start, dst_start, len}`` from
-                                  ``kernels.ops.winmap_segments``: the
-                                  Hilbert ordering keeps source runs
+                                  ``kernels.ops.winmap_segments``, sorted
+                                  by descending copy length (``kernels.
+                                  ops.sort_segments_by_class``): the
+                                  slot reordering keeps source runs
                                   long, so the fused kernel's default
                                   coalesced path issues one strided copy
                                   per segment instead of one per row
+      segoff     [P, B, S, NCLS+1]  per-length-class segment offsets into
+                                  the sorted ``winsegs`` table: the
+                                  kernel loops each power-of-two class
+                                  over exactly its own slots (dynamic
+                                  ``fori_loop`` bounds), so window DMA
+                                  issue work is O(real segments), not
+                                  O(classes x capacity)
       row_map    [P, B, R]        global (padded) output row of each
                                   virtual row; padding points at
                                   ``n_rows_pad`` (dropped by the scatter);
@@ -123,6 +143,7 @@ class OperatorShards:
     cols_per_dev: int  # input ownership chunk
     nnz: int  # true nnz across devices (before padding)
     winsegs: np.ndarray | None = None  # [P, B, S, NSEG, 3] DMA segments
+    segoff: np.ndarray | None = None  # [P, B, S, NCLS+1] class offsets
 
     @property
     def flat_rows(self) -> int:
@@ -144,8 +165,12 @@ class OperatorShards:
         the O(VMEM) double buffer, see ``kernels.xct_spmm.vmem_bytes``).
         """
         segs = 0 if self.winsegs is None else self.winsegs.size
+        offs = 0 if self.segoff is None else self.segoff.size
         return self.padded_nnz * (value_bytes + index_bytes) + (
-            self.winmap.size * 4 + self.row_map.size * 4 + segs * 4
+            self.winmap.size * 4
+            + self.row_map.size * 4
+            + segs * 4
+            + offs * 4
         )
 
 
@@ -211,6 +236,70 @@ def _block_positions(sigma: np.ndarray, chunk: int) -> np.ndarray:
     return inv[i // chunk] * chunk + i % chunk
 
 
+SLOT_ORDERS = ("runs", "first_seen")
+
+
+def _runs_stage_assignment(
+    cols: np.ndarray,
+    blk: np.ndarray,
+    vrow: np.ndarray,
+    j_in_vrow: np.ndarray,
+    n_virt: int,
+    S: int,
+    K: int,
+    n_cols_pad: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Run-extension slot assignment for one device's nnz entries.
+
+    Instead of the legacy CSR-position split (stage ``s`` takes slots
+    ``[s*K, (s+1)*K)`` of every row, so each stage's window samples a
+    *strided* subset of the row-block's columns), partition each
+    row-block's sorted column union U into ``S`` equal contiguous chunks
+    and let stage ``s`` own chunk ``s``.  Every stage window is then a
+    contiguous slice of U, so consecutive winmap entries extend into
+    long runs -- the coalesced DMA path's whole win
+    (docs/architecture.md "Slot reordering").
+
+    Per-row feasibility (a row may have more than ``K`` columns inside
+    one chunk) is restored by a staircase repair on each virtual row's
+    cumulative stage counts ``t[0..S]``: clamp forward
+    ``t[s] <= t[s-1] + K`` then backward ``t[s] >= t[s+1] - K`` -- both
+    passes keep ``t`` monotone with gaps <= K, and total nnz <= S*K per
+    virtual row guarantees a feasible staircase.  Stage membership stays
+    monotone along each row's sorted column order, so windows remain
+    sorted and ELL slots fill densely from 0 within each stage.
+    """
+    if S == 1:
+        return np.zeros_like(j_in_vrow), j_in_vrow
+    # sorted unique columns per row-block (U), via one global unique
+    bkey = blk * np.int64(n_cols_pad) + cols
+    ub = np.unique(bkey)
+    ub_blk = ub // n_cols_pad
+    ub_col = ub % n_cols_pad
+    n_blk = int(blk.max()) + 1
+    cnt_b = np.bincount(ub_blk, minlength=n_blk)
+    start_b = np.concatenate(([0], np.cumsum(cnt_b)[:-1]))
+    # chunk boundaries: beta[b, s-1] = first column of block b's chunk s
+    bidx = start_b[:, None] + (
+        np.arange(1, S, dtype=np.int64) * cnt_b[:, None]
+    ) // S
+    beta = ub_col[bidx]  # [n_blk, S-1]
+    nat = (cols[:, None] >= beta[blk]).sum(axis=1)  # natural stage
+    # per-virtual-row staircase repair on cumulative counts
+    counts = np.bincount(
+        vrow * np.int64(S) + nat, minlength=n_virt * S
+    ).reshape(n_virt, S)
+    t = np.zeros((n_virt, S + 1), np.int64)
+    np.cumsum(counts, axis=1, out=t[:, 1:])
+    for s in range(1, S):
+        np.minimum(t[:, s], t[:, s - 1] + K, out=t[:, s])
+    for s in range(S - 1, 0, -1):
+        np.maximum(t[:, s], t[:, s + 1] - K, out=t[:, s])
+    stage = (j_in_vrow[:, None] >= t[vrow, 1:S]).sum(axis=1)
+    slot = j_in_vrow - t[vrow, stage]
+    return stage, slot
+
+
 def _build_operator(
     a_perm: sp.csr_matrix,
     cfg: PartitionConfig,
@@ -227,6 +316,10 @@ def _build_operator(
     tomogram (x) and sinogram (y) vector spaces are *shared* between A and
     A^T -- CG hands one operator's output chunk straight to the other.
     """
+    if cfg.slot_order not in SLOT_ORDERS:
+        raise ValueError(
+            f"unknown slot_order {cfg.slot_order!r}; one of {SLOT_ORDERS}"
+        )
     P = cfg.n_data
     R, K = cfg.rows_per_block, cfg.nnz_per_stage
     n_rows, n_cols = a_perm.shape
@@ -288,13 +381,21 @@ def _build_operator(
         )
         pos = np.arange(m, dtype=np.int64) - indptr[row_of]
         virt = pos // cap  # split index within the row
-        stage = (pos % cap) // K
-        slot = pos % K
         # dense virtual-row ids: rank of (row, virt) among unique pairs
         vkey = row_of * np.int64(n_rows + 1) + virt
         uv, vrow = np.unique(vkey, return_inverse=True)
         blk = vrow // R
         ri = vrow % R
+        j_in_vrow = pos % cap  # nnz rank within its virtual row
+        if cfg.slot_order == "first_seen":
+            # legacy CSR-position layout: stage windows sample strided
+            # position chunks of every row (A/B baseline, fragmented)
+            stage = j_in_vrow // K
+            slot = j_in_vrow % K
+        else:
+            stage, slot = _runs_stage_assignment(
+                cols, blk, vrow, j_in_vrow, uv.size, S, K, n_cols_pad
+            )
         group = blk * S + stage  # [0, B*S)
         key = group * np.int64(n_cols_pad) + cols
         uk, inv = np.unique(key, return_inverse=True)
@@ -310,7 +411,21 @@ def _build_operator(
     # --- pass 3: materialize ---------------------------------------------
     inds = np.zeros((P, B, S, R, K), dtype=cfg.index_dtype)
     vals = np.zeros((P, B, S, R, K), dtype=np.float32)
-    winmap = np.zeros((P, B, S, buf), dtype=np.int32)
+    if cfg.slot_order == "first_seen":
+        # legacy pad encoding: unused window slots read row 0, each its
+        # own length-1 copy (kept bit-for-bit as the A/B baseline)
+        winmap = np.zeros((P, B, S, buf), dtype=np.int32)
+    else:
+        # pad-slot encoding: initialize every window to arange so the
+        # unused tail of a stage window (slots sz..buf-1) reads rows
+        # sz..buf-1 -- one consecutive-source run (O(log buf) DMA
+        # pieces) instead of buf-sz length-1 copies of row 0.  Safe:
+        # buf <= cols_per_dev (asserted), so every pad source row
+        # exists in the local slab.
+        assert buf <= cols_per_dev, (buf, cols_per_dev)
+        winmap = np.broadcast_to(
+            np.arange(buf, dtype=np.int32), (P, B, S, buf)
+        ).copy()
     row_map = np.full((P, B, R), n_rows_pad, dtype=np.int32)
     for p in range(P):
         if staged[p] is None:
@@ -324,8 +439,12 @@ def _build_operator(
         vrows = (uv // np.int64(n_rows + 1)).astype(np.int32)
         row_map[p].reshape(-1)[: vrows.size] = vrows
 
-    from ..kernels.ops import winmap_segments
+    from ..kernels.ops import sort_segments_by_class, winmap_segments
 
+    # run-length coalesced DMA plan for the fused kernel's default path:
+    # one strided copy per segment, the table sorted by length class so
+    # the kernel loops each class over exactly its own slots
+    winsegs, segoff = sort_segments_by_class(winmap_segments(winmap), buf)
     return OperatorShards(
         inds=inds,
         vals=vals,
@@ -337,9 +456,8 @@ def _build_operator(
         rows_per_dev=rows_per_dev,
         cols_per_dev=cols_per_dev,
         nnz=nnz,
-        # run-length coalesced DMA plan for the fused kernel's default
-        # path: one strided copy per segment (ops.winmap_segments)
-        winsegs=winmap_segments(winmap),
+        winsegs=winsegs,
+        segoff=segoff,
     )
 
 
@@ -415,6 +533,7 @@ def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
 
     def one(n_rows, n_cols, rows_per_dev, cols_per_dev):
         from ..kernels.traffic import est_segments_per_stage
+        from ..kernels.xct_spmm import _dma_classes
 
         foot = min(n_rows, int(1.8 * n_rows / sqrt_p) + R)
         mean_nnz = nnz_total / P / max(foot, 1)
@@ -424,7 +543,9 @@ def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
         vrows = int(1.2 * max(foot, nnz_total / P / (s * K)))
         b = _pad_to(max(1, int(math.ceil(vrows / R))), 8)
         buf = _pad_to(min(6 * (R + K), R * K), 8)
-        nseg = _pad_to(est_segments_per_stage(buf), 8)
+        nseg = _pad_to(
+            est_segments_per_stage(buf, slot_order=cfg.slot_order), 8
+        )
         v = _pad_to(max(8, int(2.5 * vrows / P)), 8)
         sds = _jax.ShapeDtypeStruct
         op = OperatorShards(
@@ -432,6 +553,7 @@ def estimate_plan(geo: XCTGeometry, cfg: PartitionConfig) -> Plan:
             vals=sds((P, b, s, R, K), np.float32),
             winmap=sds((P, b, s, buf), np.int32),
             winsegs=sds((P, b, s, nseg, 3), np.int32),
+            segoff=sds((P, b, s, len(_dma_classes(buf)) + 1), np.int32),
             row_map=sds((P, b, R), np.int32),
             foot_rows=None,
             n_rows_pad=rows_per_dev * P,

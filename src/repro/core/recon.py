@@ -27,7 +27,11 @@ from jax.sharding import PartitionSpec as P
 
 from ..dist import Topology
 from ..dist.collectives import sparse_exchange
-from ..kernels.ops import apply_operator, winmap_segments
+from ..kernels.ops import (
+    apply_operator,
+    sort_segments_by_class,
+    winmap_segments,
+)
 from .hilbert import hilbert_argsort  # noqa: F401  (re-export convenience)
 from .partition import (
     Plan,
@@ -76,6 +80,30 @@ class ReconConfig:
     # [deprecated] only the legacy gather path chunks its staging
     # transient; the fused kernel's staging lives in VMEM.
     blocks_per_call: int | None = None
+
+    @classmethod
+    def tuned(cls, passport=None, *, tune_dir=None, **overrides):
+        """Build a config from a tuning passport (``repro.tune``).
+
+        Resolution: an explicit ``passport`` wins; else the passport
+        for THIS machine's hardware fingerprint is looked up under
+        ``tune_dir`` (missing or unusable -> stock defaults, never an
+        error); ``overrides`` beat passport knobs either way.  Only the
+        knobs this dataclass owns are consumed (``precision``,
+        ``comm_mode``, ``fuse``, ``dma``) -- partition-level knobs live
+        in the passport for ``build_plan`` callers to apply.
+        """
+        if passport is None and tune_dir is not None:
+            from ..tune.passport import resolve_passport
+
+            passport = resolve_passport(tune_dir)
+        kw = {}
+        if passport is not None:
+            for field in ("precision", "comm_mode", "fuse", "dma"):
+                if field in passport.knobs:
+                    kw[field] = passport.knobs[field]
+        kw.update(overrides)
+        return cls(**kw)
 
 
 class Reconstructor:
@@ -242,13 +270,18 @@ class Reconstructor:
                 arrs[f"{name}_inds"] = sds(op.inds.shape, jnp.int16)
                 arrs[f"{name}_vals"] = sds(op.vals.shape, pol.storage)
                 arrs[f"{name}_winmap"] = sds(op.winmap.shape, jnp.int32)
-                segs_shape = (
-                    op.winsegs.shape
-                    if op.winsegs is not None
+                buf = op.winmap.shape[-1]
+                if op.winsegs is not None and op.segoff is not None:
+                    segs_shape = op.winsegs.shape
+                    off_shape = op.segoff.shape
+                else:
                     # older pickled plans: real winmap, no tables yet
-                    else winmap_segments(op.winmap).shape
-                )
+                    segs, off = sort_segments_by_class(
+                        winmap_segments(op.winmap), buf
+                    )
+                    segs_shape, off_shape = segs.shape, off.shape
                 arrs[f"{name}_winsegs"] = sds(segs_shape, jnp.int32)
+                arrs[f"{name}_segoff"] = sds(off_shape, jnp.int32)
                 arrs[f"{name}_row_map"] = sds(
                     op.row_map.shape, jnp.int32
                 )
@@ -269,11 +302,14 @@ class Reconstructor:
             arrs[f"{name}_inds"] = op.inds
             arrs[f"{name}_vals"] = op.vals.astype(pol.storage)
             arrs[f"{name}_winmap"] = op.winmap
-            arrs[f"{name}_winsegs"] = (
-                op.winsegs
-                if op.winsegs is not None
-                else winmap_segments(op.winmap)  # older pickled plans
-            )
+            if op.winsegs is not None and op.segoff is not None:
+                segs, off = op.winsegs, op.segoff
+            else:  # older pickled plans: build both tables now
+                segs, off = sort_segments_by_class(
+                    winmap_segments(op.winmap), op.winmap.shape[-1]
+                )
+            arrs[f"{name}_winsegs"] = segs
+            arrs[f"{name}_segoff"] = off
             arrs[f"{name}_row_map"] = op.row_map
             if mode == "sparse":
                 send, recv, _ = build_sparse_exchange(op)
@@ -312,6 +348,7 @@ class Reconstructor:
             vals = a[f"{prefix}_vals"][0]
             winmap = a[f"{prefix}_winmap"][0]
             winsegs = a[f"{prefix}_winsegs"][0]
+            segoff = a[f"{prefix}_segoff"][0]
             row_map = a[f"{prefix}_row_map"][0]
             n_rows_pad = rows_out * math.prod(
                 self.mesh.shape[x] for x in daxes
@@ -330,6 +367,7 @@ class Reconstructor:
                     staging=cfg.staging,
                     dma=cfg.dma,
                     winsegs=winsegs,
+                    segoff=segoff,
                     smem_budget=cfg.smem_budget,
                     blocks_per_call=cfg.blocks_per_call,
                 )
@@ -413,7 +451,8 @@ class Reconstructor:
     # ------------------------------------------------------------------ #
     def _specs(self):
         d = P(self.data_axes)
-        op_names = ["inds", "vals", "winmap", "winsegs", "row_map"]
+        op_names = ["inds", "vals", "winmap", "winsegs", "segoff",
+                    "row_map"]
         if self.cfg.comm_mode == "sparse":
             op_names += ["send", "recv"]
         elif self.cfg.comm_mode == "hier-sparse":

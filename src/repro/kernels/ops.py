@@ -28,11 +28,12 @@ import jax.numpy as jnp
 
 from . import ref
 from .traffic import DMA_MODES, STAGINGS, staged_window_bytes
-from .xct_spmm import spmm_block_ell, spmm_block_ell_staged
+from .xct_spmm import _dma_classes, spmm_block_ell, spmm_block_ell_staged
 
 __all__ = [
     "apply_operator",
     "winmap_segments",
+    "sort_segments_by_class",
     "segment_histogram",
     "dma_issue_count",
 ]
@@ -110,6 +111,49 @@ def winmap_segments(winmap, pad_to: int = 8) -> np.ndarray:
     return out.reshape(*lead, nseg, 3)
 
 
+def sort_segments_by_class(
+    winsegs, buf: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sort every stage's segment table by descending copy length and
+    build the per-class offset table the fused kernel consumes.
+
+    ``winmap_segments`` emits power-of-two pieces in run order; the
+    kernel, whose DMA extents must be static, would then have to test
+    every slot against every length class (O(classes x NSEG) issue work
+    per window -- the interpret-mode 10x inversion ``bench_spmm``
+    measured).  Grouping slots by class instead lets the kernel run one
+    ``fori_loop`` per class with *dynamic bounds* ``[off[c], off[c+1])``
+    over exactly that class's slots: total issue work is O(real
+    segments), unconditionally.
+
+    Args:
+      winsegs: ``[..., NSEG, 3]`` table from :func:`winmap_segments`.
+      buf: the window height (``winmap.shape[-1]``) -- fixes the static
+        class list ``xct_spmm._dma_classes(buf)`` the offsets index.
+
+    Returns:
+      ``(sorted_segs [..., NSEG, 3], offsets [..., NCLS+1])`` int32:
+      slots ``[offsets[i], offsets[i+1])`` hold exactly the segments of
+      length ``classes_desc[i]`` (classes in descending order);
+      ``offsets[-1]`` ends the real segments, pad slots (len 0) follow.
+    """
+    segs = np.asarray(winsegs)
+    lead, nseg = segs.shape[:-2], segs.shape[-2]
+    flat = segs.reshape(-1, nseg, 3)
+    order = np.argsort(-flat[..., 2], axis=1, kind="stable")
+    srt = np.take_along_axis(flat, order[..., None], axis=1)
+    classes = _dma_classes(buf)[::-1]
+    lens = srt[..., 2]
+    off = np.empty((flat.shape[0], len(classes) + 1), np.int32)
+    for i, ln in enumerate(classes):
+        off[:, i] = (lens > ln).sum(axis=1)
+    off[:, -1] = (lens > 0).sum(axis=1)
+    return (
+        srt.astype(np.int32).reshape(*lead, nseg, 3),
+        off.reshape(*lead, len(classes) + 1),
+    )
+
+
 def dma_issue_count(winsegs) -> int:
     """Copies the coalesced kernel issues per window pass: one per
     non-pad segment (pad slots have ``len == 0``)."""
@@ -157,6 +201,7 @@ def apply_operator(
     staging: str = "fused",
     dma: str = "coalesced",
     winsegs=None,
+    segoff=None,
     smem_budget: int | None = None,
     blocks_per_call: int | None = None,
 ):
@@ -179,6 +224,12 @@ def apply_operator(
       winsegs: precomputed ``winmap_segments(winmap)``; required when
         ``winmap`` is a traced value (e.g. inside ``shard_map`` --
         ``OperatorShards.winsegs`` carries it), computed here otherwise.
+      segoff: per-class offsets into a class-sorted ``winsegs`` (from
+        ``sort_segments_by_class``; ``OperatorShards.segoff``).  When
+        given, the kernel loops each length class over exactly its own
+        slots (O(segments) issue work); when omitted with a concrete
+        ``winmap``, both tables are built here; a traced ``winsegs``
+        without ``segoff`` falls back to the per-slot class-test kernel.
       smem_budget: per-call SMEM budget for the scalar prefetch; the
         kernel chunks row-blocks to fit (see ``xct_spmm``).
       blocks_per_call: [deprecated -- only the gather path chunks]
@@ -204,7 +255,9 @@ def apply_operator(
     if staging == "fused":
         if dma == "coalesced" and winsegs is None:
             try:
-                winsegs = winmap_segments(winmap)
+                winsegs, segoff = sort_segments_by_class(
+                    winmap_segments(winmap), buf
+                )
             except jax.errors.TracerArrayConversionError as e:
                 raise ValueError(
                     "dma='coalesced' under tracing needs precomputed "
@@ -215,6 +268,7 @@ def apply_operator(
             inds, vals_s, winmap, x_s,
             compute_dtype=compute_dtype, interpret=interpret,
             winsegs=winsegs if dma == "coalesced" else None,
+            segoff=segoff if dma == "coalesced" else None,
             smem_budget=smem_budget,
         )
         return out.reshape(b * r, f)

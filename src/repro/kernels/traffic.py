@@ -14,10 +14,13 @@ Per minibatch of ``F`` fused slices, one device's shard moves:
   descriptors  what the window staging reads to address its copies:
                B*S*BUF window ids x 4 B (per-row DMA path and the
                gather baseline's XLA gather), or B*S*NSEG x 12 B
-               ``{src, dst, len}`` segments (coalesced path -- at the
-               measured NSEG ~ 0.62 BUF this is slightly MORE descriptor
-               traffic per window entry, the price of cutting the issue
-               count; both terms are priced honestly)
+               ``{src, dst, len}`` segments (coalesced path -- with the
+               run-extension slot order NSEG ~ 1.2 BUF**0.6, so this is
+               LESS descriptor traffic on top of the issue-count win;
+               under the legacy ``slot_order="first_seen"`` layout NSEG
+               ~ 0.62 BUF and the segment table was slightly MORE
+               descriptor traffic, the price of cutting the issue count;
+               both terms are priced honestly)
   window       staging="fused":  B*S*BUF*F*sb  (each window row crosses
                HBM once: DMA'd straight into VMEM by the kernel)
                staging="gather": 2 x B*S*BUF*F*sb  (the XLA gather
@@ -50,8 +53,8 @@ True
 True
 
 and coalescing strictly drops the modeled issue count (the acceptance
-criterion of the coalesced-DMA refactor) while paying a little more
-descriptor traffic:
+criterion of the coalesced-DMA refactor); slot reordering drops it
+further still (the acceptance criterion of the run-extension layout):
 
 >>> c = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2)
 >>> c["dma_issues"] < u["dma_issues"]
@@ -59,6 +62,10 @@ True
 >>> u["dma_issues"] == 8 * 2 * 768.0
 True
 >>> c["winmap_bytes"] == 8 * 2 * est_segments_per_stage(768) * 12.0
+True
+>>> legacy = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2,
+...                       slot_order="first_seen")
+>>> c["dma_issues"] < legacy["dma_issues"]
 True
 """
 from __future__ import annotations
@@ -98,22 +105,35 @@ def staged_window_bytes(s: int, buf: int, f: int,
     return s * buf * f * storage_bytes
 
 
-def est_segments_per_stage(buf: int) -> int:
+def est_segments_per_stage(buf: int, slot_order: str = "runs") -> int:
     """Analytic decomposed-segment count for one stage's window.
 
     For abstract plans (``estimate_plan``) no winmap exists to run-length
-    encode, so the sweeps need a model.  A stage's window is the sorted
-    unique set of input columns its R x K slots touch; Hilbert ordering
-    keeps those columns *clustered* but a stage samples them strided
-    (slot position, not curve position), so runs stay short -- measured
-    mean decomposed-segment counts on real plans are 0.40-0.75 x BUF
-    (``ops.winmap_segments`` over built plans at n in [32, 64];
-    est/real in [0.5, 2] pinned by ``tests/test_kernel_spmm.py::
-    test_est_segments_calibrated``).  The model uses the measured
-    mid-band 0.62 x BUF: a strict, but honest, drop from the one-per-row
-    baseline.
+    encode, so the sweeps need a model.  The count depends on the plan's
+    ``slot_order`` (see ``core.partition.PartitionConfig``):
+
+    ``"runs"``
+        Slots are assigned by greedy run extension over the
+        Hilbert-sorted column set, so winmap entries form long
+        ``{src, dst, len}`` runs and the segment count grows sublinearly
+        with the window: measured means on built plans at n in [32, 64]
+        sit on ``~1.2 x BUF**0.6`` (8 plan shapes, BUF 72-424, est/real
+        in [0.5, 2] pinned by ``tests/test_kernel_spmm.py::
+        test_est_segments_calibrated``).
+
+    ``"first_seen"``
+        Legacy CSR-position layout: a stage samples its columns strided
+        (slot position, not curve position), so runs stay short --
+        measured means are 0.40-0.75 x BUF; the model uses the measured
+        mid-band 0.62 x BUF.
     """
-    return int(min(buf, max(1, math.ceil(0.62 * buf))))
+    if slot_order == "first_seen":
+        return int(min(buf, max(1, math.ceil(0.62 * buf))))
+    if slot_order != "runs":
+        raise ValueError(
+            f"unknown slot_order {slot_order!r}; one of ('runs', 'first_seen')"
+        )
+    return int(min(buf, max(1, math.ceil(1.2 * buf ** 0.6))))
 
 
 def op_segments_per_stage(op) -> float | None:
@@ -164,6 +184,8 @@ def spmm_traffic(
     staging: str = "fused",
     dma: str = "coalesced",
     segments_per_stage: float | None = None,
+    slot_order: str = "runs",
+    interpret_timed: bool = False,
 ) -> dict:
     """HBM bytes + FLOPs of one fused-minibatch SpMM over one shard.
 
@@ -174,8 +196,18 @@ def spmm_traffic(
     per winmap row (``dma="per_row"``), one per run-length segment
     (``dma="coalesced"``; measured ``segments_per_stage`` from
     ``ops.winmap_segments`` when available, else the analytic
-    :func:`est_segments_per_stage`), or one BlockSpec tile per stage
-    for the gather baseline (XLA stages its windows in bulk).
+    :func:`est_segments_per_stage` for the plan's ``slot_order``), or
+    one BlockSpec tile per stage for the gather baseline (XLA stages
+    its windows in bulk).
+
+    ``interpret_timed=True`` declares that any wall-clock numbers the
+    caller plans to compare against this model came from Pallas
+    interpret mode, where async copies are emulated element loops and
+    per-copy overhead is an artifact of the emulator, not the DMA
+    engine.  The model warns once per call: do not RANK dma modes on
+    interpret timings -- :func:`dma_issue_seconds` over the modeled
+    issue counts is the authority (the autotuner's modeled tier does
+    exactly that).
     """
     if staging not in STAGINGS:
         raise ValueError(
@@ -183,13 +215,24 @@ def spmm_traffic(
         )
     if dma not in DMA_MODES:
         raise ValueError(f"unknown dma {dma!r}; one of {DMA_MODES}")
+    if interpret_timed:
+        import warnings
+
+        warnings.warn(
+            "spmm_traffic: timings taken in Pallas interpret mode emulate "
+            "async copies as element loops -- per-copy cost there is an "
+            "emulator artifact.  Do not rank dma modes on those timings; "
+            "use dma_issue_seconds over the modeled issue counts instead.",
+            RuntimeWarning,
+            stacklevel=2,
+        )
     slots = float(b) * s * r * k
     win_entries = float(b) * s * buf
     passes = 1 if staging == "fused" else 2
     seg = (
         float(segments_per_stage)
         if segments_per_stage is not None
-        else float(est_segments_per_stage(buf))
+        else float(est_segments_per_stage(buf, slot_order))
     )
     if staging == "gather":
         issues = float(b) * s  # one [BUF, F] BlockSpec tile per stage

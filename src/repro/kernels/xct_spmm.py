@@ -210,6 +210,58 @@ def _spmm_fused_kernel_coalesced(
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
+def _spmm_fused_kernel_coalesced_sorted(
+    segs_ref,  # [Bc, S, NSEG, 3] int32 {src, dst, len}, class-sorted (SMEM)
+    off_ref,  # [Bc, S, NCLS+1] int32 per-class slot offsets (SMEM)
+    inds_ref,  # [1, 1, R, K] int16 block (VMEM)
+    vals_ref,  # [1, 1, R, K] storage-dtype block (VMEM)
+    x_ref,  # [C, F] whole local slab (ANY -> HBM at size)
+    out_ref,  # [1, R, F] fp32 block, revisited across stages
+    win,  # VMEM scratch [2, BUF, F]
+    sems,  # DMA semaphores [2]
+    *,
+    compute_dtype,
+    classes: tuple,  # descending copy lengths, matching off_ref's axis
+):
+    """One (row-block, stage) grid step; class-sorted coalesced DMAs.
+
+    ``ops.sort_segments_by_class`` groups each stage's segments by copy
+    length, so every static length class loops -- with *dynamic*
+    ``fori_loop`` bounds from the prefetched offset table -- over exactly
+    its own slots and issues unconditional fixed-extent copies.  Issue
+    work is O(real segments) per window, vs the unsorted fallback's
+    O(classes x NSEG) per-slot class tests (the interpret-mode 10x
+    inversion).  Start and wait walk the same bounds, so semaphore
+    counts always balance.
+    """
+    i, s = pl.program_id(0), pl.program_id(1)
+    n_s = pl.num_programs(1)
+    step = i * n_s + s
+    n_steps = pl.num_programs(0) * n_s
+
+    def window_dma(which, slot, op):
+        bi, si = which // n_s, which % n_s
+        for ci, ln in enumerate(classes):  # static unroll over classes
+
+            def one_seg(j, carry, ln=ln):
+                dma = pltpu.make_async_copy(
+                    x_ref.at[pl.ds(segs_ref[bi, si, j, 0], ln)],
+                    win.at[slot, pl.ds(segs_ref[bi, si, j, 1], ln)],
+                    sems.at[slot],
+                )
+                getattr(dma, op)()
+                return carry
+
+            jax.lax.fori_loop(
+                off_ref[bi, si, ci], off_ref[bi, si, ci + 1],
+                one_seg, None,
+            )
+
+    _staged_pipeline(window_dma, step, n_steps, s, out_ref)
+    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
 def _staged_pipeline(window_dma, step, n_steps, s, out_ref):
     """The shared multi-stage double-buffer schedule: prologue-load the
     first window, prefetch stage ``step+1`` before computing ``step``."""
@@ -304,11 +356,14 @@ def smem_bytes(
 
 
 def seg_smem_bytes(
-    b: int, s: int, nseg: int, budget: int | None = None
+    b: int, s: int, nseg: int, budget: int | None = None,
+    noff: int = 0,
 ) -> int:
     """Scalar-memory footprint of a prefetched ``winsegs`` chunk
-    (int32 ``{src, dst, len}`` triples), for ``b`` row-blocks."""
-    total = b * s * nseg * 3 * 4
+    (int32 ``{src, dst, len}`` triples), for ``b`` row-blocks.
+    ``noff`` adds the per-class offset table entries of the class-sorted
+    path (``NCLS+1`` int32 per (row-block, stage))."""
+    total = b * s * (nseg * 3 + noff) * 4
     if budget is not None and total > budget:
         raise ValueError(
             f"winsegs chunk of {b} row-block(s) needs {total} B of SMEM "
@@ -347,6 +402,7 @@ def spmm_block_ell(
     compute_dtype=jnp.float32,
     interpret: bool | None = None,
     winsegs=None,
+    segoff=None,
     smem_budget: int | None = None,
 ):
     """Fused multi-stage SpMM over one device's blocked-ELL shard, with
@@ -368,6 +424,11 @@ def spmm_block_ell(
               coalesced multi-row copy per segment instead of one copy
               per ``winmap`` row (the default production path -- see
               ``ops.apply_operator(dma=...)``).
+      segoff: [B, S, NCLS+1] int32 per-length-class offsets into a
+              class-sorted ``winsegs`` (``ops.sort_segments_by_class``);
+              when given, each class loops over exactly its own slots
+              (O(segments) issue work); when omitted the kernel tests
+              every slot against every class (legacy unsorted tables).
       smem_budget: per-call scalar-memory budget for the prefetched
               descriptors; the prefetch is chunked over row-blocks to
               fit (outer ``lax.scan``), so shards of any B run.
@@ -386,15 +447,23 @@ def spmm_block_ell(
         r, k, buf, f, jnp.dtype(vals.dtype).itemsize, budget=VMEM_BUDGET
     )
     coalesced = winsegs is not None
+    sorted_segs = coalesced and segoff is not None
     # validates too: a single over-budget row-block raises a named error
     per_block = (
-        seg_smem_bytes(1, s, winsegs.shape[-2], budget=budget)
+        seg_smem_bytes(
+            1, s, winsegs.shape[-2], budget=budget,
+            noff=segoff.shape[-1] if sorted_segs else 0,
+        )
         if coalesced
         else smem_bytes(1, s, buf, budget=budget)
     )
     bpc = _prefetch_chunk_blocks(b, per_block, budget)
 
-    def one_call(ic, vc, wc, sc):
+    def one_call(ic, vc, wc, sc, oc):
+        if sorted_segs:
+            return _pallas_fused_coalesced_sorted(
+                ic, vc, sc, oc, x, buf, compute_dtype, interpret
+            )
         if coalesced:
             return _pallas_fused_coalesced(
                 ic, vc, sc, x, buf, compute_dtype, interpret
@@ -404,12 +473,14 @@ def spmm_block_ell(
         )
 
     if bpc >= b:
-        return one_call(inds, vals, winmap, winsegs)
+        return one_call(inds, vals, winmap, winsegs, segoff)
 
     n_chunk = b // bpc
 
     def step(_, args):
         return None, one_call(*args)
+
+    dummy = jnp.zeros((n_chunk, 1), jnp.int32)  # unused scan carries
 
     _, outs = jax.lax.scan(
         step,
@@ -421,7 +492,12 @@ def spmm_block_ell(
             (
                 winsegs.reshape(n_chunk, bpc, s, *winsegs.shape[2:])
                 if coalesced
-                else jnp.zeros((n_chunk, 1), jnp.int32)  # unused carry
+                else dummy
+            ),
+            (
+                segoff.reshape(n_chunk, bpc, s, segoff.shape[-1])
+                if sorted_segs
+                else dummy
             ),
         ),
     )
@@ -473,16 +549,51 @@ def _pallas_fused_coalesced(inds, vals, winsegs, x, buf, compute_dtype,
     )(winsegs.astype(jnp.int32), inds, vals, x)
 
 
-def _fused_grid_spec(b, s, r, k, buf, f, x_dtype):
+def _pallas_fused_coalesced_sorted(inds, vals, winsegs, segoff, x, buf,
+                                   compute_dtype, interpret):
+    """Class-sorted table + offsets: the default production path."""
+    b, s, r, k = inds.shape
+    f = x.shape[-1]
+    classes = _dma_classes(buf)[::-1]  # descending, = segoff's axis
+    if segoff.shape[-1] != len(classes) + 1:
+        raise ValueError(
+            f"segoff carries {segoff.shape[-1] - 1} length classes but "
+            f"BUF={buf} implies {len(classes)} "
+            "(sort_segments_by_class(winsegs, buf) with the same buf)"
+        )
+    kernel = functools.partial(
+        _spmm_fused_kernel_coalesced_sorted,
+        compute_dtype=compute_dtype,
+        classes=classes,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=_fused_grid_spec(
+            b, s, r, k, buf, f, x.dtype, num_scalar_prefetch=2
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(winsegs.astype(jnp.int32), segoff.astype(jnp.int32), inds, vals, x)
+
+
+def _fused_grid_spec(b, s, r, k, buf, f, x_dtype,
+                     num_scalar_prefetch: int = 1):
+    # index maps take the grid indices plus one trailing arg per
+    # scalar-prefetch operand; *refs absorbs either arity
     return pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=num_scalar_prefetch,
         grid=(b, s),
         in_specs=[
-            pl.BlockSpec((1, 1, r, k), lambda i, j, wm: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, r, k), lambda i, j, wm: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, r, k), lambda i, j, *refs: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, r, k), lambda i, j, *refs: (i, j, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),
         ],
-        out_specs=pl.BlockSpec((1, r, f), lambda i, j, wm: (i, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, r, f), lambda i, j, *refs: (i, 0, 0)
+        ),
         scratch_shapes=[
             pltpu.VMEM((2, buf, f), x_dtype),
             pltpu.SemaphoreType.DMA((2,)),

@@ -61,7 +61,30 @@ def main(argv=None):
              "in the prefetch thread (overlap) or keep it on the "
              "critical path (sync)",
     )
+    ap.add_argument(
+        "--tune-dir", default=None,
+        help="directory of repro.tune passports; this machine's "
+             "passport (by hardware fingerprint) fills every knob the "
+             "command line left at its default",
+    )
     args = ap.parse_args(argv)
+
+    # Passport knobs apply ONLY where the flag still holds its parser
+    # default: an explicit command-line choice always beats the tuner.
+    tuned: dict = {}
+    if args.tune_dir:
+        from ..tune.passport import resolve_passport
+
+        pp = resolve_passport(args.tune_dir)
+        if pp is not None:
+            tuned = dict(pp.knobs)
+            for flag in ("fuse", "precision", "comm", "dma"):
+                knob = {"comm": "comm_mode"}.get(flag, flag)
+                if knob in tuned and \
+                        getattr(args, flag) == ap.get_default(flag):
+                    setattr(args, flag, tuned[knob])
+            print(f"tuning passport {pp.fingerprint} applied "
+                  f"({args.tune_dir})")
 
     geo = XCTGeometry(n=args.n, n_angles=args.angles)
     print(f"building system matrix ({geo.n_rays} rays x {geo.n_vox} vox)")
@@ -69,9 +92,12 @@ def main(argv=None):
     plan = build_plan(
         geo,
         PartitionConfig(
-            n_data=args.p_data, tile=8,
-            rows_per_block=32, nnz_per_stage=32,
+            n_data=args.p_data,
+            tile=tuned.get("tile", 8),
+            rows_per_block=tuned.get("rows_per_block", 32),
+            nnz_per_stage=tuned.get("nnz_per_stage", 32),
             socket=default_socket(args.p_data, args.p_data),
+            slot_order=tuned.get("slot_order", "runs"),
         ),
         a=a,
     )

@@ -87,7 +87,11 @@ class AdmissionController:
 
     ``fair_share`` is how many same-key jobs the sizing leaves room
     for; ``max_queue`` bounds the backlog (a submit past it is rejected
-    -- backpressure, not unbounded latency).
+    -- backpressure, not unbounded latency).  A tuning passport
+    (``repro.tune``; pass one explicitly or a ``tune_dir`` to resolve
+    this machine's by hardware fingerprint) flows into every
+    ``suggest_slab`` pricing call, so admission and the streaming
+    scheduler size slabs from the SAME tuned cap.
     """
 
     def __init__(
@@ -97,6 +101,8 @@ class AdmissionController:
         *,
         fair_share: int = 2,
         max_queue: int | None = None,
+        passport=None,
+        tune_dir: str | None = None,
     ):
         if fair_share < 1:
             raise ValueError(f"fair_share must be >= 1: {fair_share}")
@@ -104,6 +110,11 @@ class AdmissionController:
         self.topology = topology
         self.fair_share = int(fair_share)
         self.max_queue = max_queue
+        if passport is None and tune_dir is not None:
+            from ..tune.passport import resolve_passport
+
+            passport = resolve_passport(tune_dir)
+        self.passport = passport
 
     # ------------------------------------------------------------------ #
     # pricing
@@ -134,7 +145,7 @@ class AdmissionController:
         # overflow the budget: that is the reject signal
         sp = suggest_slab(
             plan, rcfg, self.topology, self.mem_budget,
-            n_slices=n_slices,
+            n_slices=n_slices, passport=self.passport,
         )
         if y_slab is None:
             # fair share: leave room for fair_share - 1 peers

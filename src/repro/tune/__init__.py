@@ -1,0 +1,41 @@
+"""Config autotuning: sweep the modeled design space, persist a passport.
+
+``repro.tune`` closes the loop between the shared cost models
+(``kernels.traffic``, ``launch.xct_perf.comm_volume``,
+``stream.scheduler.suggest_slab``) and the runtime configs that consume
+them.  :func:`autotune.autotune` sweeps block shape x slab budget x comm
+mode x dma mode x slot order through those models -- the *modeled* tier
+needs no accelerator at all -- and persists the argmin as a versioned,
+per-hardware **tuning passport** (:mod:`~repro.tune.passport`) that
+``core.recon.ReconConfig.tuned``, ``launch.recon --tune-dir``,
+``stream.scheduler.suggest_slab(passport=...)`` and
+``serve.admission.AdmissionController(tune_dir=...)`` all resolve by
+hardware fingerprint.
+"""
+from .autotune import DEFAULT_SPACE, autotune, modeled_objective
+from .passport import (
+    SCHEMA_VERSION,
+    PassportVersionError,
+    TuningPassport,
+    describe_hardware,
+    hardware_fingerprint,
+    load_passport,
+    passport_path,
+    resolve_passport,
+    save_passport,
+)
+
+__all__ = [
+    "DEFAULT_SPACE",
+    "autotune",
+    "modeled_objective",
+    "SCHEMA_VERSION",
+    "PassportVersionError",
+    "TuningPassport",
+    "describe_hardware",
+    "hardware_fingerprint",
+    "load_passport",
+    "passport_path",
+    "resolve_passport",
+    "save_passport",
+]

@@ -11,6 +11,7 @@ from repro.kernels.ops import (
     apply_operator,
     dma_issue_count,
     segment_histogram,
+    sort_segments_by_class,
     winmap_segments,
 )
 from repro.kernels.ref import spmm_ref
@@ -509,3 +510,144 @@ def test_plan_winsegs_replay_winmap(small_system):
                 np.testing.assert_array_equal(
                     rebuilt, op.winmap[pi, bi, si]
                 )
+
+
+# --------------------------------------------------------------------- #
+# slot reordering (ISSUE 7): layout permutation invariance + the
+# class-sorted segment tables the reordered kernel consumes
+# --------------------------------------------------------------------- #
+def _permute_layout(rng, inds, winmap):
+    """Rename every (b, s) window's slots by an independent random
+    permutation: ``winmap'[j] = winmap[perm[j]]``, ``inds' =
+    perm^-1[inds]`` -- the same-values-different-slots transform slot
+    reordering applies at plan build."""
+    b, s, buf = winmap.shape
+    wm2 = np.empty_like(winmap)
+    inds2 = np.empty_like(inds)
+    for bi in range(b):
+        for si in range(s):
+            perm = rng.permutation(buf)
+            inv = np.argsort(perm)
+            wm2[bi, si] = winmap[bi, si][perm]
+            inds2[bi, si] = inv[inds[bi, si]].astype(inds.dtype)
+    return inds2, wm2
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(1, 4), st.integers(1, 3), st.sampled_from([8, 16]),
+    st.integers(1, 8),
+    st.sampled_from(["f32", "f16", "bf16"]),
+    st.sampled_from(["f32", "f16"]),
+    st.sampled_from(["coalesced", "per_row"]),
+    st.integers(0, 10_000),
+)
+def test_slot_permutation_bitexact(
+    b, s, r, f, storage, compute, dma, seed
+):
+    """Tentpole property (ISSUE 7): a window-slot layout is a pure
+    renaming.  For ANY per-stage slot permutation the kernel output is
+    BIT-identical across the storage x compute ladder under both DMA
+    modes -- each (row, k) slot still multiplies the same value pair,
+    in the same stage, in the same order, so not even the FP rounding
+    can move.  This is the invariance that lets ``core.partition``
+    reorder slots for long runs without touching numerics."""
+    sdt = {"f32": jnp.float32, "f16": jnp.float16,
+           "bf16": jnp.bfloat16}[storage]
+    cdt = {"f32": jnp.float32, "f16": jnp.float16}[compute]
+    k, buf, c = 8, 24, 96
+    rng = np.random.default_rng(seed)
+    inds, vals, winmap, x = _random_ell(rng, b, s, r, k, buf, c, f)
+    inds2, wm2 = _permute_layout(rng, inds, winmap)
+    out = [
+        np.asarray(apply_operator(
+            jnp.asarray(i), jnp.asarray(vals), jnp.asarray(w),
+            jnp.asarray(x), storage_dtype=sdt, compute_dtype=cdt,
+            dma=dma,
+        ))
+        for i, w in ((inds, winmap), (inds2, wm2))
+    ]
+    np.testing.assert_array_equal(out[0], out[1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(4, 64), st.integers(1, 12), st.integers(0, 10_000)
+)
+def test_winmap_segments_roundtrip_property(buf, run_hi, seed):
+    """Satellite property (ISSUE 7): for ANY winmap the run-length
+    table covers every window row exactly once with power-of-two
+    lengths and no overlaps, and the class-sorted table preserves the
+    cover while its offsets bracket exact length classes -- the
+    contract the sorted coalesced kernel's per-class loops rely on."""
+    from repro.kernels.xct_spmm import _dma_classes
+
+    rng = np.random.default_rng(seed)
+    wm = _winmap_from_runs(rng, buf, 4 * buf, 1, run_hi)[None, None]
+    segs = winmap_segments(wm)
+    srt, off = sort_segments_by_class(segs, buf)
+    for table in (segs, srt):
+        covered = np.zeros(buf, bool)
+        rebuilt = np.full(buf, -1, np.int64)
+        for src, dst, ln in table[0, 0]:
+            if ln == 0:
+                continue
+            assert ln & (ln - 1) == 0, ln  # power-of-two pieces only
+            assert not covered[dst:dst + ln].any()  # no overlap
+            covered[dst:dst + ln] = True
+            rebuilt[dst:dst + ln] = np.arange(src, src + ln)
+        assert covered.all()  # no hole: every row delivered once
+        np.testing.assert_array_equal(rebuilt, wm[0, 0])
+    lens = srt[0, 0, :, 2]
+    assert (np.diff(lens) <= 0).all()  # descending by copy length
+    classes = _dma_classes(buf)[::-1]
+    o = off[0, 0]
+    assert o.shape == (len(classes) + 1,)
+    assert (np.diff(o) >= 0).all()
+    for i, ln in enumerate(classes):
+        assert (lens[o[i]:o[i + 1]] == ln).all(), (ln, o)
+    assert (lens[o[-1]:] == 0).all()  # only pads past the last offset
+    assert o[-1] == int((lens > 0).sum())
+
+
+def test_sort_segments_by_class_known():
+    """Exact sorted table + offsets on the hand-written winmap of
+    ``test_winmap_segments_known`` (stable within a length class)."""
+    wm = np.array([[[5, 6, 7, 8, 9, 20, 9, 10, 11]]], np.int32)
+    srt, off = sort_segments_by_class(winmap_segments(wm), 9)
+    want = [(5, 0, 4), (9, 6, 2), (9, 4, 1), (20, 5, 1), (11, 8, 1)]
+    assert [tuple(t) for t in srt[0, 0] if t[2] > 0] == want
+    # classes descending for BUF=9: 8, 4, 2, 1; no len-8 segment
+    np.testing.assert_array_equal(off[0, 0], [0, 0, 1, 2, 5])
+
+
+def test_sorted_segments_bitexact_and_validated(small_system):
+    """The class-sorted table + offsets drive the kernel to the same
+    bits as the unsorted table, and a segoff whose class axis does not
+    match BUF raises a named error instead of corrupting copies."""
+    _, _, plan = small_system
+    op = plan.proj
+    inds = jnp.asarray(op.inds[0])
+    vals = jnp.asarray(op.vals[0])
+    wm = jnp.asarray(op.winmap[0])
+    x = jnp.asarray(
+        np.random.default_rng(5).normal(
+            size=(op.cols_per_dev, 4)
+        ).astype(np.float32)
+    )
+    legacy = apply_operator(
+        inds, vals, wm, x, winsegs=jnp.asarray(op.winsegs[0]),
+        dma="coalesced",
+    )
+    sorted_ = apply_operator(
+        inds, vals, wm, x, winsegs=jnp.asarray(op.winsegs[0]),
+        segoff=jnp.asarray(op.segoff[0]), dma="coalesced",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(legacy), np.asarray(sorted_)
+    )
+    with pytest.raises(ValueError, match="segoff"):
+        apply_operator(
+            inds, vals, wm, x, winsegs=jnp.asarray(op.winsegs[0]),
+            segoff=jnp.asarray(op.segoff[0][..., :2]), dma="coalesced",
+        )

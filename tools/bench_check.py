@@ -36,9 +36,9 @@ import json
 import pathlib
 import sys
 
-# field -> (direction, comparison): "up" = bigger is better;
-# "absolute" fields gate raw values, "normalized" fields gate the
-# machine-normalized shape (see module docstring)
+# field -> (direction, comparison): "up" = bigger is better, "down" =
+# smaller is better; "absolute" fields gate raw values, "normalized"
+# fields gate the machine-normalized shape (see module docstring)
 GUARDED_FIELDS = {
     "ai": ("up", "absolute"),
     "slices_per_s": ("up", "normalized"),
@@ -47,6 +47,14 @@ GUARDED_FIELDS = {
     # jobs_per_s is wall-clock throughput -- machine-normalize it
     "hit_rate": ("up", "absolute"),
     "jobs_per_s": ("up", "normalized"),
+    # spmm suite, window-DMA layout quality: both deterministic plan
+    # properties (run-length tables of the committed bench geometry).
+    # segs_mean = mean winmap entries per issued copy (longer runs
+    # coalesce better, gate upward); dma_issues = copies issued per
+    # minibatch (gate DOWNWARD -- fragmentation regressions show up
+    # here first, see the slot-reordering PR)
+    "segs_mean": ("up", "absolute"),
+    "dma_issues": ("down", "absolute"),
 }
 
 UPDATE_HINT = """\
@@ -114,13 +122,17 @@ def compare(
             if bv <= 0:
                 continue
             rel = (fv - bv) / bv
-            if direction == "up" and rel < -threshold:
+            regressed = (
+                rel < -threshold if direction == "up"
+                else rel > threshold
+            )
+            if regressed:
                 norm = (
                     f" (machine-normalized /{scales[field]:.3f})"
                     if kind == "normalized" else ""
                 )
                 failures.append(
-                    f"{name}: {field} regressed {100 * -rel:.1f}% "
+                    f"{name}: {field} regressed {100 * abs(rel):.1f}% "
                     f"({bv:g} -> {fv:g}{norm})"
                 )
     return failures, notes
