@@ -1,7 +1,11 @@
 """Paper Fig. 9: XCT-optimized SpMM speedup + roofline vs fusing factor.
 
 Sweeps the minibatch (slice-fusing) size F across precision policies on a
-real blocked-ELL shard, for the staging x DMA A/B ladder: ``fused`` (the
+real blocked-ELL shard -- the ladder now runs down to the quantized
+``q8`` rung (int8 vals + per-block power-of-two scales dequantized
+inline; rows carry the measured resident ``hbm_bytes`` of the shard at
+each width, which the CI gate guards downward) -- for the staging x DMA
+A/B ladder: ``fused`` (the
 kernel streams each stage's window HBM -> VMEM itself with run-length
 *coalesced* copies -- the production path), ``fused-perrow`` (same
 kernel, one copy per window row -- the DMA-issue baseline the coalescing
@@ -26,6 +30,7 @@ import numpy as np
 
 from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import PartitionConfig, build_plan
+from repro.core.precision import quantize_block_vals
 from repro.kernels.ops import (
     apply_operator,
     dma_issue_count,
@@ -156,6 +161,7 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
     winmap = jnp.asarray(op.winmap[0])
     winsegs = jnp.asarray(op.winsegs[0])
     segoff = jnp.asarray(op.segoff[0])
+    q_vals, q_scales = quantize_block_vals(vals, jnp.int8)
     segs_stage, segs_mean, _, segs_hist = _seg_stats(op)
     _, b, s, r, k = op.inds.shape
     buf = op.winmap.shape[-1]
@@ -163,14 +169,18 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
     if quick:
         fusings = tuple(fusings)[:3]
     base_t = None
+    # the quantized rung: int8 vals + per-block scales through the same
+    # kernel (scales ride scalar prefetch); vectors stay f16
     policies = (
-        [("single", jnp.float32), ("mixed", jnp.float16)]
+        [("single", jnp.float32), ("mixed", jnp.float16),
+         ("q8", jnp.float16)]
         if quick
         else [
             ("double", jnp.float32),  # f64 n/a on TPU; f32 stands in
             ("single", jnp.float32),
             ("half", jnp.float16),
             ("mixed", jnp.float16),
+            ("q8", jnp.float16),
         ]
     )
     # the A/B ladder: (row tag, staging, dma)
@@ -182,22 +192,34 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
         ]
     for prec, sdt in policies:
         cdt = jnp.float16 if prec == "half" else jnp.float32
+        quant = prec == "q8"
+        v_run = q_vals if quant else vals
+        sc_run = q_scales if quant else None
+        vb = 1 if quant else jnp.dtype(sdt).itemsize
+        # measured resident footprint of the real shard at this width
+        # (value stream + scale table for the quantized rung)
+        op_hbm = op.hbm_bytes(value_bytes=vb)
         for f in fusings:
             x = jnp.asarray(
                 rng.normal(size=(op.cols_per_dev, f)).astype(np.float32)
             )
             for tag, staging, dma in paths:
+                if quant and staging != "fused":
+                    continue  # gather baseline dequantizes eagerly
                 fn = jax.jit(
-                    lambda xx, i=inds, v=vals, w=winmap, sg=winsegs,
-                    so=segoff, sd=sdt, cd=cdt, st=staging, dm=dma:
+                    lambda xx, i=inds, v=v_run, w=winmap, sg=winsegs,
+                    so=segoff, sd=sdt, cd=cdt, st=staging, dm=dma,
+                    sc=sc_run:
                     apply_operator(i, v, w, xx, storage_dtype=sd,
                                    compute_dtype=cd, staging=st,
-                                   dma=dm, winsegs=sg, segoff=so)
+                                   dma=dm, winsegs=sg, segoff=so,
+                                   scales=sc)
                 )
                 t = timeit(fn, x, reps=3 if not quick else 1)
                 tr = spmm_traffic(
                     b, s, r, k, buf, f,
                     storage_bytes=jnp.dtype(sdt).itemsize,
+                    vals_bytes=vb,
                     staging=staging, dma=dma,
                     segments_per_stage=segs_stage,
                 )
@@ -219,6 +241,7 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
                     # throughput speedup per unit work (Fig. 9a metric)
                     f"speedup={base_t / (t / flops):.2f}x "
                     f"ai={ai:.2f}flop/B "
+                    f"hbm_bytes={op_hbm} "
                     f"roofline={tpu_gflops:.0f}GF/s" + extra,
                 )
 

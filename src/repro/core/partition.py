@@ -154,7 +154,9 @@ class OperatorShards:
     def padded_nnz(self) -> int:
         return int(np.prod(self.inds.shape))
 
-    def hbm_bytes(self, value_bytes: int = 2, index_bytes: int = 2) -> int:
+    def hbm_bytes(
+        self, value_bytes: int | None = 2, index_bytes: int = 2
+    ) -> int:
         """Resident HBM footprint of the operator (paper packed layout).
 
         Counts only what actually lives in HBM under in-kernel staging:
@@ -163,14 +165,29 @@ class OperatorShards:
         legacy gather path is a *transient*, not part of the operator --
         and the fused kernel never allocates it at all (its staging is
         the O(VMEM) double buffer, see ``kernels.xct_spmm.vmem_bytes``).
+
+        ``value_bytes=None`` reads the width off ``vals`` itself (the
+        shards normally hold the f32 master copy, so pass the policy's
+        ``vals_bytes`` to price the packed form; ``None`` is for shards
+        already stored narrow).  A 1-byte width adds the per-(block,
+        stage) int32 dequantization-scale table the quantized tier
+        carries alongside the values.
         """
+        vb = (
+            self.vals.dtype.itemsize if value_bytes is None else value_bytes
+        )
+        # quantized tier: one int32 exponent per (device, block, stage)
+        scale_table = (
+            int(np.prod(self.inds.shape[:3])) * 4 if vb == 1 else 0
+        )
         segs = 0 if self.winsegs is None else self.winsegs.size
         offs = 0 if self.segoff is None else self.segoff.size
-        return self.padded_nnz * (value_bytes + index_bytes) + (
+        return self.padded_nnz * (vb + index_bytes) + (
             self.winmap.size * 4
             + self.row_map.size * 4
             + segs * 4
             + offs * 4
+            + scale_table
         )
 
 
@@ -774,6 +791,36 @@ def estimate_hier_sparse(
     w = _pad_to(max(8, int(math.ceil(union / fast))), 8)
     v2 = _pad_to(max(8, int(1.6 * w / max(1, n_slow))), 8)
     return w, v2
+
+
+def hier_sparse_wire_bytes(
+    v2: int,
+    n_slow: int,
+    f: int,
+    *,
+    comm_bytes: int = 2,
+    wire: str = "native",
+) -> int:
+    """Per-device DCI payload of one hier-sparse slow-axis all-to-all.
+
+    ``native`` ships the partial sums in the policy's wire dtype:
+    ``n_slow * V2 * F * comm_bytes``.  ``q8`` ships int8 values plus one
+    f32 inverse scale per (slow peer, fused slice) -- the per-band
+    compression ``dist.collectives.sparse_exchange(wire="q8")`` applies
+    around the all-to-all:
+
+    >>> hier_sparse_wire_bytes(1024, 4, 16, comm_bytes=2)
+    131072
+    >>> hier_sparse_wire_bytes(1024, 4, 16, comm_bytes=2, wire="q8")
+    65792
+    >>> _ / 131072  # doctest: +ELLIPSIS
+    0.501953125
+    """
+    if wire == "native":
+        return n_slow * v2 * f * comm_bytes
+    if wire == "q8":
+        return n_slow * v2 * f * 1 + n_slow * f * 4
+    raise ValueError(f"unknown wire {wire!r}; one of ('native', 'q8')")
 
 
 def default_socket(p_data: int, fast: int) -> int:

@@ -15,6 +15,7 @@ DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -22,23 +23,30 @@ import jax.numpy as jnp
 __all__ = [
     "Precision",
     "POLICIES",
+    "ALIASES",
     "get_policy",
     "adaptive_scale",
     "adaptive_scale_cols",
     "qcast",
+    "quantize_block_vals",
+    "dequantize_block_vals",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class Precision:
-    """A storage/compute/communication dtype triple.
+    """A storage/compute/communication dtype triple (plus operator vals).
 
     Attributes:
-      storage: dtype of resident vectors and of the sparse-matrix values
-        (the paper's 2-byte ``len`` when half/mixed).
+      storage: dtype of resident vectors and of the staged input windows
+        (the paper's 2-byte packing when half/mixed).
       compute: FMA/accumulation dtype inside kernels.
       comm: wire dtype for partial-data reductions.
       adaptive: apply max-norm power-of-two rescaling around narrow casts.
+      vals: dtype of the packed sparse-matrix *values*, decoupled from
+        ``storage`` so the operator can drop below the vector width
+        (int8 / fp8 with per-block scales -- the quantized ladder rung).
+        ``None`` means "same as storage" (every pre-quantization policy).
     """
 
     name: str
@@ -46,6 +54,7 @@ class Precision:
     compute: jnp.dtype
     comm: jnp.dtype
     adaptive: bool = False
+    vals: object = None
 
     @property
     def storage_bytes(self) -> int:
@@ -54,6 +63,26 @@ class Precision:
     @property
     def comm_bytes(self) -> int:
         return jnp.dtype(self.comm).itemsize
+
+    @property
+    def vals_dtype(self):
+        """Operator value dtype (defaults to the vector storage dtype)."""
+        return self.storage if self.vals is None else self.vals
+
+    @property
+    def vals_bytes(self) -> int:
+        return jnp.dtype(self.vals_dtype).itemsize
+
+    @property
+    def quantized(self) -> bool:
+        """True when operator vals carry per-block scales (1-byte tier)."""
+        return self.vals is not None
+
+
+def _fp8_dtype():
+    """fp8-e4m3 where this jax build ships it (TPU-era numpy/ml_dtypes);
+    ``None`` gates the policy off cleanly elsewhere."""
+    return getattr(jnp, "float8_e4m3fn", None)
 
 
 POLICIES = {
@@ -68,15 +97,37 @@ POLICIES = {
     "mixed_bf16": Precision(
         "mixed_bf16", jnp.bfloat16, jnp.float32, jnp.bfloat16, adaptive=True
     ),
+    # Quantized operator tier: int8 vals + per-block power-of-two scales
+    # (dequantized inline in the kernel's FMA loop); vectors/wire stay at
+    # the mixed policy's f16, compute stays f32.
+    "q8": Precision(
+        "q8", jnp.float16, jnp.float32, jnp.float16, adaptive=True,
+        vals=jnp.int8,
+    ),
+}
+if _fp8_dtype() is not None:
+    POLICIES["fp8"] = Precision(
+        "fp8", jnp.float16, jnp.float32, jnp.float16, adaptive=True,
+        vals=_fp8_dtype(),
+    )
+
+# Spelling conveniences: the dtype names people type first.
+ALIASES = {
+    "f32": "single",
+    "f64": "double",
+    "f16": "half",
+    "int8": "q8",
 }
 
 
 def get_policy(name: str) -> Precision:
+    key = ALIASES.get(name, name)
     try:
-        return POLICIES[name]
+        return POLICIES[key]
     except KeyError:
         raise KeyError(
-            f"unknown precision {name!r}; one of {sorted(POLICIES)}"
+            f"unknown precision {name!r}; one of {sorted(POLICIES)} "
+            f"(aliases: {', '.join(f'{a}->{b}' for a, b in sorted(ALIASES.items()))})"
         ) from None
 
 
@@ -126,3 +177,63 @@ def qcast(x, dtype, *, adaptive: bool = False, target: float = 256.0,
         return x.astype(dtype), jnp.float32(1.0)
     s = adaptive_scale(x, target=target, axis_name=axis_name)
     return (x.astype(jnp.float32) * s).astype(dtype), 1.0 / s
+
+
+def _quant_target(dtype) -> float:
+    """Max-|value| the quantized grid should land on: int8's symmetric
+    127, or fp8-e4m3's 240 (max finite 448, with headroom so the
+    power-of-two rounding of the scale can overshoot by 2x safely)."""
+    return 127.0 if jnp.dtype(dtype).kind == "i" else 240.0
+
+
+def quantize_block_vals(vals, dtype):
+    """Pack operator values into ``dtype`` with per-block scales.
+
+    One power-of-two scale per (row-block, stage) -- computed with the
+    same max-norm machinery as :func:`adaptive_scale_cols`, each block
+    treated as one column -- steers that block's max |value| onto the
+    narrow grid.  Power-of-two scales make the (de)scaling itself
+    lossless, so the only error is the grid rounding.
+
+    Args:
+      vals: ``[..., R, K]`` float lengths (the shards use
+        ``[P, B, S, R, K]``; every leading index is its own block).
+      dtype: ``jnp.int8`` or the fp8-e4m3 dtype.
+
+    Returns:
+      ``(q, exp)``: ``q`` the packed ``[..., R, K]`` values and ``exp``
+      the int32 ``[...]`` *dequantization* exponents -- the original
+      values are approximated by ``q * 2.0**exp`` (see
+      :func:`dequantize_block_vals`; the kernel applies the same factor
+      inline in its FMA loop).
+    """
+    dt = jnp.dtype(dtype)
+    lead = vals.shape[:-2]
+    flat = jnp.asarray(vals, jnp.float32).reshape(
+        max(1, math.prod(lead)), -1
+    )
+    # Per-block max-norm factor, as adaptive_scale_cols but with *floor*
+    # rounding: the scaled max must land at or below the grid edge
+    # (nearest-rounding could overshoot by sqrt(2) and clip the largest
+    # values in the block by up to ~30%).
+    m = jnp.max(jnp.abs(flat), axis=1)
+    m = jnp.maximum(m, jnp.finfo(jnp.float32).tiny)
+    sexp = jnp.clip(
+        jnp.floor(jnp.log2(_quant_target(dt) / m)), -100, 100
+    ).astype(jnp.int32)
+    scale = jnp.ldexp(jnp.ones_like(m), sexp)
+    q = flat * scale[:, None]
+    if dt.kind == "i":
+        q = jnp.clip(jnp.round(q), -127, 127)
+    q = q.astype(dt).reshape(vals.shape)
+    return q, (-sexp).reshape(lead)
+
+
+def dequantize_block_vals(q, exp, dtype=jnp.float32):
+    """Widen per-block quantized values: ``q * 2.0**exp`` in f32."""
+    scale = jnp.ldexp(
+        jnp.ones(exp.shape, jnp.float32), jnp.asarray(exp, jnp.int32)
+    )
+    return (
+        q.astype(jnp.float32) * scale[..., None, None]
+    ).astype(dtype)

@@ -40,7 +40,12 @@ from .partition import (
     estimate_hier_sparse,
 )
 from .pipeline import pipelined_apply
-from .precision import adaptive_scale_cols, get_policy, qcast
+from .precision import (
+    adaptive_scale_cols,
+    get_policy,
+    qcast,
+    quantize_block_vals,
+)
 from .solver import cgnr
 
 __all__ = ["ReconConfig", "Reconstructor", "StagedSlab"]
@@ -66,8 +71,10 @@ class StagedSlab:
 
 @dataclasses.dataclass(frozen=True)
 class ReconConfig:
-    precision: str = "mixed"  # paper ladder: double|single|half|mixed (+bf16)
+    precision: str = "mixed"  # paper ladder: double|single|half|mixed
+    #   (+bf16 variants, +q8/fp8 quantized-operator tiers)
     comm_mode: str = "hier"  # direct | rs | hier | sparse | hier-sparse
+    wire: str = "native"  # hier-sparse slow-axis wire: native | q8
     fuse: int = 16  # paper's minibatch size (FFACTOR)
     overlap: bool = True  # Fig. 8 pipelining
     use_ref: bool = False  # oracle instead of Pallas kernel
@@ -90,7 +97,7 @@ class ReconConfig:
         ``tune_dir`` (missing or unusable -> stock defaults, never an
         error); ``overrides`` beat passport knobs either way.  Only the
         knobs this dataclass owns are consumed (``precision``,
-        ``comm_mode``, ``fuse``, ``dma``) -- partition-level knobs live
+        ``comm_mode``, ``wire``, ``fuse``, ``dma``) -- partition-level knobs live
         in the passport for ``build_plan`` callers to apply.
         """
         if passport is None and tune_dir is not None:
@@ -99,7 +106,7 @@ class ReconConfig:
             passport = resolve_passport(tune_dir)
         kw = {}
         if passport is not None:
-            for field in ("precision", "comm_mode", "fuse", "dma"):
+            for field in ("precision", "comm_mode", "wire", "fuse", "dma"):
                 if field in passport.knobs:
                     kw[field] = passport.knobs[field]
         kw.update(overrides)
@@ -179,6 +186,16 @@ class Reconstructor:
         self.data_axes = topology.data_axes
         self.batch_axes = topology.batch_axes
         self.policy = get_policy(cfg.precision)
+        if cfg.wire not in ("native", "q8"):
+            raise ValueError(
+                f"unknown wire {cfg.wire!r}; one of ('native', 'q8')"
+            )
+        if cfg.wire == "q8" and cfg.comm_mode != "hier-sparse":
+            raise ValueError(
+                "wire='q8' compresses the hier-sparse slow-axis hop; "
+                f"comm_mode={cfg.comm_mode!r} has no such hop (use "
+                "comm_mode='hier-sparse' or wire='native')"
+            )
         self.comm_plan = topology.plan(cfg.comm_mode)
         if topology.n_data != plan.cfg.n_data:
             raise ValueError(
@@ -268,7 +285,11 @@ class Reconstructor:
             if self.abstract:
                 sds = jax.ShapeDtypeStruct
                 arrs[f"{name}_inds"] = sds(op.inds.shape, jnp.int16)
-                arrs[f"{name}_vals"] = sds(op.vals.shape, pol.storage)
+                arrs[f"{name}_vals"] = sds(op.vals.shape, pol.vals_dtype)
+                if pol.quantized:
+                    arrs[f"{name}_vscale"] = sds(
+                        op.vals.shape[:3], jnp.int32
+                    )
                 arrs[f"{name}_winmap"] = sds(op.winmap.shape, jnp.int32)
                 buf = op.winmap.shape[-1]
                 if op.winsegs is not None and op.segoff is not None:
@@ -300,7 +321,15 @@ class Reconstructor:
                     arrs[f"{name}_recv"] = sds((p, n_slow, v2), jnp.int32)
                 continue
             arrs[f"{name}_inds"] = op.inds
-            arrs[f"{name}_vals"] = op.vals.astype(pol.storage)
+            if pol.quantized:
+                # pack once at bind time: int8/fp8 values + per-(block,
+                # stage) power-of-two dequant exponents the kernel
+                # applies inline (core.precision.quantize_block_vals)
+                q, exp = quantize_block_vals(op.vals, pol.vals_dtype)
+                arrs[f"{name}_vals"] = np.asarray(q)
+                arrs[f"{name}_vscale"] = np.asarray(exp)
+            else:
+                arrs[f"{name}_vals"] = op.vals.astype(pol.storage)
             arrs[f"{name}_winmap"] = op.winmap
             if op.winsegs is not None and op.segoff is not None:
                 segs, off = op.winsegs, op.segoff
@@ -346,6 +375,9 @@ class Reconstructor:
         def one_operator(prefix, rows_out):
             inds = a[f"{prefix}_inds"][0]
             vals = a[f"{prefix}_vals"][0]
+            vscale = (
+                a[f"{prefix}_vscale"][0] if pol.quantized else None
+            )
             winmap = a[f"{prefix}_winmap"][0]
             winsegs = a[f"{prefix}_winsegs"][0]
             segoff = a[f"{prefix}_segoff"][0]
@@ -370,6 +402,7 @@ class Reconstructor:
                     segoff=segoff,
                     smem_budget=cfg.smem_budget,
                     blocks_per_call=cfg.blocks_per_call,
+                    scales=vscale,
                 )
 
             comm_plan = self.comm_plan
@@ -395,6 +428,7 @@ class Reconstructor:
                         socket_rows=(
                             self._socket_rows[prefix] if hier else None
                         ),
+                        wire=cfg.wire,
                     )
                 else:
                     # scatter-ADD: split rows (virtual-row packing) may
@@ -453,6 +487,8 @@ class Reconstructor:
         d = P(self.data_axes)
         op_names = ["inds", "vals", "winmap", "winsegs", "segoff",
                     "row_map"]
+        if self.policy.quantized:
+            op_names += ["vscale"]
         if self.cfg.comm_mode == "sparse":
             op_names += ["send", "recv"]
         elif self.cfg.comm_mode == "hier-sparse":

@@ -160,7 +160,9 @@ class Topology:
     def plan(self, mode: str, *, pair_slots: int | None = None,
              dense_rows: int | None = None,
              merged_rows: int | None = None,
-             cross_rows: int | None = None) -> "CommPlan":
+             cross_rows: int | None = None,
+             wire: str = "native",
+             comm_bytes: int = 2) -> "CommPlan":
         """Resolve ``mode`` into a :class:`CommPlan`.
 
         The sparse modes additionally need static table capacities to
@@ -173,10 +175,16 @@ class Topology:
         ``core.partition.exchange_volume_params`` computes all four from
         an operator shard (exact tables when built, estimates for
         abstract plans).
+
+        ``wire="q8"`` (hier-sparse only) prices the compressed slow-axis
+        hop of ``collectives.sparse_exchange(wire="q8")``: int8 payload
+        plus one f32 scale per (slow peer, slice), relative to a native
+        wire of ``comm_bytes``-wide values (the policy's ``comm_bytes``).
         """
         return CommPlan.resolve(
             self, mode, pair_slots=pair_slots, dense_rows=dense_rows,
             merged_rows=merged_rows, cross_rows=cross_rows,
+            wire=wire, comm_bytes=comm_bytes,
         )
 
     def describe(self) -> str:
@@ -254,9 +262,21 @@ class CommPlan:
                 pair_slots: int | None = None,
                 dense_rows: int | None = None,
                 merged_rows: int | None = None,
-                cross_rows: int | None = None) -> "CommPlan":
+                cross_rows: int | None = None,
+                wire: str = "native",
+                comm_bytes: int = 2) -> "CommPlan":
         if mode not in MODES:
             raise ValueError(f"unknown comm mode {mode!r}; one of {MODES}")
+        if wire not in ("native", "q8"):
+            raise ValueError(
+                f"unknown wire {wire!r}; one of ('native', 'q8')"
+            )
+        if wire == "q8" and mode != "hier-sparse":
+            raise ValueError(
+                "wire='q8' compresses the hier-sparse slow-axis hop only "
+                "(other modes ship dense partials; quantize via the "
+                "precision policy's comm dtype instead)"
+            )
         levels = topo.levels
         axes = topo.data_axes
         slowest = levels[-1].link if levels else "ici"
@@ -292,7 +312,20 @@ class CommPlan:
             else:
                 sock_frac = float("nan")
             if cross_rows is not None and dense_rows:
-                cross_frac = cross_rows / float(dense_rows)
+                if wire == "q8":
+                    # int8 values + one f32 inverse scale per slow peer
+                    # (per slice), as a fraction of the *native* dense
+                    # frame (dense_rows at comm_bytes wide) so level
+                    # fractions stay comparable across wire formats
+                    # (core.partition.hier_sparse_wire_bytes).
+                    n_slow = max(
+                        1, math.prod(lv.size for lv in levels[1:])
+                    )
+                    cross_frac = (cross_rows * 1 + n_slow * 4) / (
+                        float(dense_rows) * comm_bytes
+                    )
+                else:
+                    cross_frac = cross_rows / float(dense_rows)
             else:
                 cross_frac = float("nan")
             steps = (

@@ -204,6 +204,7 @@ def apply_operator(
     segoff=None,
     smem_budget: int | None = None,
     blocks_per_call: int | None = None,
+    scales=None,
 ):
     """Shard-local fused SpMM: returns the fp32 partial rows [B*R, F].
 
@@ -234,6 +235,12 @@ def apply_operator(
         kernel chunks row-blocks to fit (see ``xct_spmm``).
       blocks_per_call: [deprecated -- only the gather path chunks]
         row-blocks per inner scan step; auto-sized when None.
+      scales: [B, S] int32 per-block dequantization exponents
+        (``core.precision.quantize_block_vals``).  When given, ``vals``
+        is already-packed int8/fp8 and is passed through untouched; the
+        fused kernel dequantizes inline in its FMA loop, the ref/gather
+        paths widen to f32 up front (same arithmetic, one extra HBM
+        round trip -- A/B baselines only).
     """
     if staging not in STAGINGS:
         raise ValueError(
@@ -241,11 +248,17 @@ def apply_operator(
         )
     if dma not in DMA_MODES:
         raise ValueError(f"unknown dma {dma!r}; one of {DMA_MODES}")
-    vals_s = vals.astype(storage_dtype)
+    quantized = scales is not None
+    vals_s = vals if quantized else vals.astype(storage_dtype)
     x_s = x_loc.astype(storage_dtype)
     b, s, r, k = inds.shape
     buf = winmap.shape[-1]
     f = x_loc.shape[-1]
+
+    if quantized and (use_ref or staging != "fused"):
+        from repro.core.precision import dequantize_block_vals
+
+        vals_s = dequantize_block_vals(vals, scales, jnp.float32)
 
     if use_ref:
         return ref.spmm_ref(
@@ -270,6 +283,7 @@ def apply_operator(
             winsegs=winsegs if dma == "coalesced" else None,
             segoff=segoff if dma == "coalesced" else None,
             smem_budget=smem_budget,
+            scales=scales,
         )
         return out.reshape(b * r, f)
 

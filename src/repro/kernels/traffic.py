@@ -67,6 +67,19 @@ True
 ...                       slot_order="first_seen")
 >>> c["dma_issues"] < legacy["dma_issues"]
 True
+
+Quantized operator values (``vals_bytes=1``: int8/fp8 + the int32
+per-(block, stage) scale table) shrink the dominant operator stream --
+3 B/nnz slot vs 4 B at f16 -- and raise intensity accordingly:
+
+>>> q = spmm_traffic(8, 2, 64, 64, 768, 16, storage_bytes=2,
+...                  vals_bytes=1)
+>>> q["operator_bytes"] == 8 * 2 * 64 * 64 * 3.0 + 8 * 2 * 4.0
+True
+>>> q["operator_bytes"] < c["operator_bytes"]
+True
+>>> q["intensity"] > c["intensity"]
+True
 """
 from __future__ import annotations
 
@@ -181,6 +194,7 @@ def spmm_traffic(
     f: int,
     *,
     storage_bytes: int = 2,
+    vals_bytes: int | None = None,
     staging: str = "fused",
     dma: str = "coalesced",
     segments_per_stage: float | None = None,
@@ -199,6 +213,13 @@ def spmm_traffic(
     :func:`est_segments_per_stage` for the plan's ``slot_order``), or
     one BlockSpec tile per stage for the gather baseline (XLA stages
     its windows in bulk).
+
+    ``vals_bytes`` is the width of the packed operator *values*
+    (``Precision.vals_bytes``); ``None`` means same as the vector
+    ``storage_bytes`` (every pre-quantization policy).  A 1-byte width
+    adds the int32 per-(block, stage) dequantization-scale table to the
+    descriptor stream (4 B per stage -- the scales ride scalar
+    prefetch, but they still cross HBM once).
 
     ``interpret_timed=True`` declares that any wall-clock numbers the
     caller plans to compare against this model came from Pallas
@@ -243,8 +264,10 @@ def spmm_traffic(
     else:
         issues = float(b) * s * seg
         desc_bytes = float(b) * s * seg * 12  # {src, dst, len} int32
+    vb = storage_bytes if vals_bytes is None else vals_bytes
+    scale_bytes = float(b) * s * 4 if vb == 1 else 0.0
     out = {
-        "operator_bytes": slots * (2 + storage_bytes),
+        "operator_bytes": slots * (2 + vb) + scale_bytes,
         "winmap_bytes": desc_bytes,
         "window_bytes": win_entries * storage_bytes * f * passes,
         "out_bytes": float(b) * r * f * 4 * 2,

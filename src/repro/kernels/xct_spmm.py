@@ -85,10 +85,19 @@ SMEM_BUDGET = 256 << 10
 VMEM_BUDGET = 16 << 20
 
 
-def _fma_block(inds_ref, window, vals_ref, compute_dtype):
-    """out[R, F] = sum_k vals[:, k] * window[inds[:, k]] for one stage."""
+def _fma_block(inds_ref, window, vals_ref, compute_dtype, scale=None):
+    """out[R, F] = sum_k vals[:, k] * window[inds[:, k]] for one stage.
+
+    ``scale`` (a compute-dtype scalar, from the scalar-prefetched
+    per-block exponents of the quantized tier) dequantizes int8/fp8
+    vals inline: the multiply rides the same VREG upcast the f16 path
+    already pays, so quantization costs no extra HBM stream and no
+    extra FMA pass.
+    """
     inds = inds_ref[0, 0].astype(jnp.int32)  # [R, K]
     vals = vals_ref[0, 0].astype(compute_dtype)  # [R, K]
+    if scale is not None:
+        vals = vals * scale
     window = window.astype(compute_dtype)  # [BUF, F]
     r, k = inds.shape
     f = window.shape[-1]
@@ -121,19 +130,34 @@ def _dma_classes(buf: int) -> tuple:
     return tuple(classes)
 
 
+def _block_scale(scl_ref, i, s, compute_dtype):
+    """Dequant factor ``2**exp`` of block (i, s) from the prefetched
+    exponent table; ldexp so the factor is bit-exact (power of two)."""
+    return jnp.ldexp(
+        jnp.ones((), compute_dtype), scl_ref[i, s]
+    )
+
+
 def _spmm_fused_kernel(
     winmap_ref,  # [Bc, S, BUF] int32, scalar-prefetched (SMEM)
-    inds_ref,  # [1, 1, R, K] int16 block (VMEM)
-    vals_ref,  # [1, 1, R, K] storage-dtype block (VMEM)
-    x_ref,  # [C, F] whole local slab (ANY -> HBM at size)
-    out_ref,  # [1, R, F] fp32 block, revisited across stages
-    win,  # VMEM scratch [2, BUF, F]: double-buffered window slots
-    sems,  # DMA semaphores [2]
-    *,
+    *rest,  # [scl_ref,] inds_ref, vals_ref, x_ref, out_ref, win, sems
     compute_dtype,
     buf: int,
+    quantized: bool = False,
 ):
-    """One (row-block, stage) grid step; per-row window DMAs (A/B path)."""
+    """One (row-block, stage) grid step; per-row window DMAs (A/B path).
+
+    With ``quantized=True`` a second scalar-prefetch operand
+    ``scl_ref [Bc, S]`` (int32 dequant exponents) precedes the VMEM
+    refs: inds [1,1,R,K] int16, vals [1,1,R,K] (int8/fp8 when
+    quantized), x [C,F] (ANY), out [1,R,F], then the window scratch and
+    DMA semaphores.
+    """
+    if quantized:
+        scl_ref, inds_ref, vals_ref, x_ref, out_ref, win, sems = rest
+    else:
+        scl_ref = None
+        inds_ref, vals_ref, x_ref, out_ref, win, sems = rest
     i, s = pl.program_id(0), pl.program_id(1)
     n_s = pl.num_programs(1)
     step = i * n_s + s  # linear stage counter across the whole grid
@@ -157,22 +181,22 @@ def _spmm_fused_kernel(
         jax.lax.fori_loop(0, buf, one_row, None)
 
     _staged_pipeline(window_dma, step, n_steps, s, out_ref)
-    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
+    scale = (
+        _block_scale(scl_ref, i, s, compute_dtype) if quantized else None
+    )
+    acc = _fma_block(
+        inds_ref, win[step % 2], vals_ref, compute_dtype, scale
+    )
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
 def _spmm_fused_kernel_coalesced(
     segs_ref,  # [Bc, S, NSEG, 3] int32 {src, dst, len} (SMEM)
-    inds_ref,  # [1, 1, R, K] int16 block (VMEM)
-    vals_ref,  # [1, 1, R, K] storage-dtype block (VMEM)
-    x_ref,  # [C, F] whole local slab (ANY -> HBM at size)
-    out_ref,  # [1, R, F] fp32 block, revisited across stages
-    win,  # VMEM scratch [2, BUF, F]
-    sems,  # DMA semaphores [2]
-    *,
+    *rest,  # [scl_ref,] inds_ref, vals_ref, x_ref, out_ref, win, sems
     compute_dtype,
     nseg: int,
     classes: tuple,
+    quantized: bool = False,
 ):
     """One (row-block, stage) grid step; run-length-coalesced DMAs.
 
@@ -180,8 +204,15 @@ def _spmm_fused_kernel_coalesced(
     run-length segment: ``x[src:src+len] -> win[slot, dst:dst+len]``,
     ``len`` a power of two from the static ``classes`` (pad segments
     have ``len == 0`` and issue nothing).  Start and wait walk the same
-    predicates, so semaphore counts always balance.
+    predicates, so semaphore counts always balance.  ``quantized``
+    prepends the int32 exponent table ``scl_ref [Bc, S]`` to the refs
+    (see ``_spmm_fused_kernel``).
     """
+    if quantized:
+        scl_ref, inds_ref, vals_ref, x_ref, out_ref, win, sems = rest
+    else:
+        scl_ref = None
+        inds_ref, vals_ref, x_ref, out_ref, win, sems = rest
     i, s = pl.program_id(0), pl.program_id(1)
     n_s = pl.num_programs(1)
     step = i * n_s + s
@@ -206,22 +237,22 @@ def _spmm_fused_kernel_coalesced(
             jax.lax.fori_loop(0, nseg, one_seg, None)
 
     _staged_pipeline(window_dma, step, n_steps, s, out_ref)
-    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
+    scale = (
+        _block_scale(scl_ref, i, s, compute_dtype) if quantized else None
+    )
+    acc = _fma_block(
+        inds_ref, win[step % 2], vals_ref, compute_dtype, scale
+    )
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
 def _spmm_fused_kernel_coalesced_sorted(
     segs_ref,  # [Bc, S, NSEG, 3] int32 {src, dst, len}, class-sorted (SMEM)
     off_ref,  # [Bc, S, NCLS+1] int32 per-class slot offsets (SMEM)
-    inds_ref,  # [1, 1, R, K] int16 block (VMEM)
-    vals_ref,  # [1, 1, R, K] storage-dtype block (VMEM)
-    x_ref,  # [C, F] whole local slab (ANY -> HBM at size)
-    out_ref,  # [1, R, F] fp32 block, revisited across stages
-    win,  # VMEM scratch [2, BUF, F]
-    sems,  # DMA semaphores [2]
-    *,
+    *rest,  # [scl_ref,] inds_ref, vals_ref, x_ref, out_ref, win, sems
     compute_dtype,
     classes: tuple,  # descending copy lengths, matching off_ref's axis
+    quantized: bool = False,
 ):
     """One (row-block, stage) grid step; class-sorted coalesced DMAs.
 
@@ -232,8 +263,15 @@ def _spmm_fused_kernel_coalesced_sorted(
     work is O(real segments) per window, vs the unsorted fallback's
     O(classes x NSEG) per-slot class tests (the interpret-mode 10x
     inversion).  Start and wait walk the same bounds, so semaphore
-    counts always balance.
+    counts always balance.  ``quantized`` appends the int32 exponent
+    table ``scl_ref [Bc, S]`` as a third scalar-prefetch operand (see
+    ``_spmm_fused_kernel``).
     """
+    if quantized:
+        scl_ref, inds_ref, vals_ref, x_ref, out_ref, win, sems = rest
+    else:
+        scl_ref = None
+        inds_ref, vals_ref, x_ref, out_ref, win, sems = rest
     i, s = pl.program_id(0), pl.program_id(1)
     n_s = pl.num_programs(1)
     step = i * n_s + s
@@ -258,7 +296,12 @@ def _spmm_fused_kernel_coalesced_sorted(
             )
 
     _staged_pipeline(window_dma, step, n_steps, s, out_ref)
-    acc = _fma_block(inds_ref, win[step % 2], vals_ref, compute_dtype)
+    scale = (
+        _block_scale(scl_ref, i, s, compute_dtype) if quantized else None
+    )
+    acc = _fma_block(
+        inds_ref, win[step % 2], vals_ref, compute_dtype, scale
+    )
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
@@ -303,6 +346,7 @@ def vmem_bytes(
     store_bytes: int = 2,
     stages_buffered: int = 2,
     budget: int | None = None,
+    win_bytes: int | None = None,
 ) -> int:
     """Per-grid-step VMEM footprint (the paper's 96 KB shared-mem budget).
 
@@ -310,14 +354,20 @@ def vmem_bytes(
     buffering: stage ``s+1`` streams in while stage ``s`` computes);
     the staging memory is O(VMEM), not an O(64 MB) HBM transient.
 
+    ``store_bytes`` sizes the value tile; ``win_bytes`` the staged
+    window slots (the input-vector storage dtype).  They coincide for
+    the float ladder, but the quantized tier packs int8/fp8 vals under
+    f16 windows -- ``win_bytes=None`` keeps the legacy coupled sizing.
+
     With ``budget=`` the request is validated: a footprint above the
     budget raises a ``ValueError`` naming the dominant dimension to
     shrink, instead of letting Mosaic fail opaquely at lower time.
     """
+    wb = store_bytes if win_bytes is None else win_bytes
     terms = {
         "R*K (inds, int16)": r * k * 2,
         "R*K (vals)": r * k * store_bytes,
-        "BUF*F (window slots)": stages_buffered * buf * f * store_bytes,
+        "BUF*F (window slots)": stages_buffered * buf * f * wb,
         "R*F (fp32 accumulator)": r * f * 4,
     }
     total = sum(terms.values())
@@ -404,6 +454,7 @@ def spmm_block_ell(
     winsegs=None,
     segoff=None,
     smem_budget: int | None = None,
+    scales=None,
 ):
     """Fused multi-stage SpMM over one device's blocked-ELL shard, with
     the window staging done *inside* the kernel (paper Listing 1).
@@ -433,6 +484,12 @@ def spmm_block_ell(
               descriptors; the prefetch is chunked over row-blocks to
               fit (outer ``lax.scan``), so shards of any B run.
               Defaults to ``SMEM_BUDGET``.
+      scales: [B, S] int32 per-block *dequantization* exponents
+              (``core.precision.quantize_block_vals``); when given,
+              ``vals`` is int8/fp8 and the kernel multiplies each
+              block's FMA by ``2.0**scales[b, s]`` inline.  The table
+              rides the scalar-prefetch path next to winmap/segoff
+              (4 B per (row-block, stage) of SMEM, no HBM stream).
 
     Returns:
       [B, R, F] fp32 partial output band blocks.
@@ -444,7 +501,8 @@ def spmm_block_ell(
     buf = winmap.shape[-1]
     f = x.shape[-1]
     vmem_bytes(
-        r, k, buf, f, jnp.dtype(vals.dtype).itemsize, budget=VMEM_BUDGET
+        r, k, buf, f, jnp.dtype(vals.dtype).itemsize,
+        win_bytes=jnp.dtype(x.dtype).itemsize, budget=VMEM_BUDGET,
     )
     coalesced = winsegs is not None
     sorted_segs = coalesced and segoff is not None
@@ -459,21 +517,23 @@ def spmm_block_ell(
     )
     bpc = _prefetch_chunk_blocks(b, per_block, budget)
 
-    def one_call(ic, vc, wc, sc, oc):
+    def one_call(ic, vc, wc, sc, oc, qc):
+        qc = qc if scales is not None else None  # scan dummy -> None
         if sorted_segs:
             return _pallas_fused_coalesced_sorted(
-                ic, vc, sc, oc, x, buf, compute_dtype, interpret
+                ic, vc, sc, oc, x, buf, compute_dtype, interpret,
+                scales=qc,
             )
         if coalesced:
             return _pallas_fused_coalesced(
-                ic, vc, sc, x, buf, compute_dtype, interpret
+                ic, vc, sc, x, buf, compute_dtype, interpret, scales=qc
             )
         return _pallas_fused_per_row(
-            ic, vc, wc, x, compute_dtype, interpret
+            ic, vc, wc, x, compute_dtype, interpret, scales=qc
         )
 
     if bpc >= b:
-        return one_call(inds, vals, winmap, winsegs, segoff)
+        return one_call(inds, vals, winmap, winsegs, segoff, scales)
 
     n_chunk = b // bpc
 
@@ -499,33 +559,44 @@ def spmm_block_ell(
                 if sorted_segs
                 else dummy
             ),
+            (
+                scales.reshape(n_chunk, bpc, s)
+                if scales is not None
+                else dummy
+            ),
         ),
     )
     return outs.reshape(b, r, f)
 
 
 def _pallas_fused_per_row(inds, vals, winmap, x, compute_dtype,
-                          interpret):
+                          interpret, scales=None):
     b, s, r, k = inds.shape
     buf = winmap.shape[-1]
     f = x.shape[-1]
     kernel = functools.partial(
-        _spmm_fused_kernel, compute_dtype=compute_dtype, buf=buf
+        _spmm_fused_kernel, compute_dtype=compute_dtype, buf=buf,
+        quantized=scales is not None,
+    )
+    pre = (winmap.astype(jnp.int32),) + (
+        (scales.astype(jnp.int32),) if scales is not None else ()
     )
     return pl.pallas_call(
         kernel,
-        grid_spec=_fused_grid_spec(b, s, r, k, buf, f, x.dtype),
+        grid_spec=_fused_grid_spec(
+            b, s, r, k, buf, f, x.dtype, num_scalar_prefetch=len(pre)
+        ),
         out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
         # cross-step window prefetch orders the whole grid
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(winmap.astype(jnp.int32), inds, vals, x)
+    )(*pre, inds, vals, x)
 
 
 def _pallas_fused_coalesced(inds, vals, winsegs, x, buf, compute_dtype,
-                            interpret):
+                            interpret, scales=None):
     """``buf`` (the scratch window height every dst range fits in) comes
     from the caller's ``winmap.shape[-1]`` -- ``winmap_segments`` tiles
     exactly ``[0, BUF)`` with its dst ranges."""
@@ -537,20 +608,26 @@ def _pallas_fused_coalesced(inds, vals, winsegs, x, buf, compute_dtype,
         compute_dtype=compute_dtype,
         nseg=nseg,
         classes=_dma_classes(buf),
+        quantized=scales is not None,
+    )
+    pre = (winsegs.astype(jnp.int32),) + (
+        (scales.astype(jnp.int32),) if scales is not None else ()
     )
     return pl.pallas_call(
         kernel,
-        grid_spec=_fused_grid_spec(b, s, r, k, buf, f, x.dtype),
+        grid_spec=_fused_grid_spec(
+            b, s, r, k, buf, f, x.dtype, num_scalar_prefetch=len(pre)
+        ),
         out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(winsegs.astype(jnp.int32), inds, vals, x)
+    )(*pre, inds, vals, x)
 
 
 def _pallas_fused_coalesced_sorted(inds, vals, winsegs, segoff, x, buf,
-                                   compute_dtype, interpret):
+                                   compute_dtype, interpret, scales=None):
     """Class-sorted table + offsets: the default production path."""
     b, s, r, k = inds.shape
     f = x.shape[-1]
@@ -565,18 +642,22 @@ def _pallas_fused_coalesced_sorted(inds, vals, winsegs, segoff, x, buf,
         _spmm_fused_kernel_coalesced_sorted,
         compute_dtype=compute_dtype,
         classes=classes,
+        quantized=scales is not None,
+    )
+    pre = (winsegs.astype(jnp.int32), segoff.astype(jnp.int32)) + (
+        (scales.astype(jnp.int32),) if scales is not None else ()
     )
     return pl.pallas_call(
         kernel,
         grid_spec=_fused_grid_spec(
-            b, s, r, k, buf, f, x.dtype, num_scalar_prefetch=2
+            b, s, r, k, buf, f, x.dtype, num_scalar_prefetch=len(pre)
         ),
         out_shape=jax.ShapeDtypeStruct((b, r, f), jnp.float32),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(winsegs.astype(jnp.int32), segoff.astype(jnp.int32), inds, vals, x)
+    )(*pre, inds, vals, x)
 
 
 def _fused_grid_spec(b, s, r, k, buf, f, x_dtype,

@@ -484,6 +484,7 @@ def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
 
     pol = get_policy(rcfg.precision)
     sb, cb = pol.storage_bytes, pol.comm_bytes
+    wire = getattr(rcfg, "wire", "native")
     out = {"flops_dev": 0.0, "hbm_dev": 0.0, "ici_dev": 0.0,
            "dci_dev": 0.0, "dma_issues_dev": 0.0}
     for op in (plan.proj, plan.back):
@@ -491,6 +492,7 @@ def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
         segs = op_segments_per_stage(op)
         t = spmm_traffic(
             b, s, r, k, op.winmap.shape[-1], fuse, storage_bytes=sb,
+            vals_bytes=pol.vals_bytes,
             staging=getattr(rcfg, "staging", "fused"),
             dma=getattr(rcfg, "dma", "coalesced"),
             segments_per_stage=segs,
@@ -503,7 +505,9 @@ def xct_analytic(plan, rcfg, topo, fuse: int, iters: int) -> dict:
             exchange_volume_params(op, topo)
             if rcfg.comm_mode in ("sparse", "hier-sparse") else {}
         )
-        wl = topo.plan(rcfg.comm_mode, **params).wire_bytes_by_link(dense)
+        wl = topo.plan(
+            rcfg.comm_mode, wire=wire, comm_bytes=cb, **params
+        ).wire_bytes_by_link(dense)
         out["ici_dev"] += iters * wl.get("ici", 0.0)
         out["dci_dev"] += iters * wl.get("dci", 0.0)
     return out

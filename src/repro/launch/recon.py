@@ -112,11 +112,15 @@ def main(argv=None):
         )
     else:
         mesh = None
+    # the wire knob only exists on the hier-sparse ladder; drop it if a
+    # command-line --comm override moved off the mode the passport tuned
+    wire = tuned.get("wire", "native") if args.comm == "hier-sparse" \
+        else "native"
     rec = Reconstructor(
         plan, mesh=mesh,
         cfg=ReconConfig(
             precision=args.precision, comm_mode=args.comm,
-            fuse=args.fuse, dma=args.dma,
+            fuse=args.fuse, dma=args.dma, wire=wire,
         ),
     )
 

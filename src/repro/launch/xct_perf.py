@@ -92,13 +92,15 @@ def sweep_topology(p_data: int, fast: int = 16, pod: int = 256) -> Topology:
 
 
 def comm_volume(plan, mode: str, fuse: int, comm_bytes: int,
-                topo: Topology) -> dict:
+                topo: Topology, wire: str = "native") -> dict:
     """Per-device wire bytes per reduction, by link class, from CommPlan.
 
     Sums the proj and back operators' per-link volumes under ``topo``'s
     ladder; the table capacities for the sparse modes come from
     ``core.partition.exchange_volume_params`` (exact when the plan holds
     real shards, analytic for ``estimate_plan`` abstractions).
+    ``wire="q8"`` (hier-sparse only) prices the int8-compressed slow-axis
+    hop of ``dist.collectives.sparse_exchange``.
     """
     out = {"ici": 0.0, "dci": 0.0}
     for op in (plan.proj, plan.back):
@@ -109,14 +111,14 @@ def comm_volume(plan, mode: str, fuse: int, comm_bytes: int,
             exchange_volume_params(op, topo)
             if mode in ("sparse", "hier-sparse") else {}
         )
-        cp = topo.plan(mode, **params)
+        cp = topo.plan(mode, wire=wire, comm_bytes=comm_bytes, **params)
         for link, b in cp.wire_bytes_by_link(dense).items():
             out[link] = out.get(link, 0.0) + b
     return out
 
 
 def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused",
-          dma="coalesced"):
+          dma="coalesced", precision="mixed", wire="native"):
     """Full mode x fuse sweep of the analytic cost model.
 
     ``staging`` selects the SpMM memory-traffic model: the default
@@ -128,8 +130,14 @@ def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused",
     baseline O(BUF) -- the memory term prices both as
     ``issues x per_copy_overhead + bytes / bw``
     (``kernels.traffic.dma_issue_seconds``), so the sweep shows the
-    issue-overhead win at production scale.
+    issue-overhead win at production scale.  ``precision`` names the
+    policy whose storage/vals/comm widths price the traffic (the
+    quantized ``"q8"`` tier shrinks the dominant operator stream);
+    ``wire="q8"`` additionally compresses the hier-sparse slow hop
+    (skipped for modes without one).
     """
+    from ..core.precision import get_policy
+
     ds = DATASETS[dataset]
     geo = XCTGeometry(n=ds.n, n_angles=ds.k)
     topo = sweep_topology(p_data)
@@ -138,11 +146,13 @@ def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused",
         socket=default_socket(p_data, topo.levels[0].size),
     )
     plan = estimate_plan(geo, pcfg)
+    pol = get_policy(precision)
     rows = []
     nnz_total = geo.n_rays * 1.195 * ds.n
     for mode in MODES:
+        mode_wire = wire if mode == "hier-sparse" else "native"
         for fuse in (1, 4, 16, 64):
-            sb = 2  # mixed: f16/bf16 storage + wire
+            sb = pol.storage_bytes  # mixed default: f16 storage + wire
             flops = 0.0
             hbm = 0.0
             issues = 0.0
@@ -150,13 +160,16 @@ def sweep(dataset="xct-brain", p_data=512, iters=30, staging="fused",
                 _, b, s, r, k = op.inds.shape
                 t = spmm_traffic(
                     b, s, r, k, op.winmap.shape[-1], fuse,
-                    storage_bytes=sb, staging=staging, dma=dma,
+                    storage_bytes=sb, vals_bytes=pol.vals_bytes,
+                    staging=staging, dma=dma,
                     segments_per_stage=op_segments_per_stage(op),
                 )
                 flops += iters * t["flops"]
                 hbm += iters * t["hbm_bytes"]
                 issues += iters * t["dma_issues"]
-            cv = comm_volume(plan, mode, fuse, sb, topo)
+            cv = comm_volume(
+                plan, mode, fuse, pol.comm_bytes, topo, wire=mode_wire
+            )
             t_comp = flops / HW.peak_flops
             t_mem = dma_issue_seconds(issues, hbm, HW.hbm_bw)
             t_coll = iters * (

@@ -240,10 +240,10 @@ class ReconServer:
         spec = job.spec
         plan = build_plan(spec.geo, spec.pcfg)
         rec = Reconstructor(plan, cfg=spec.rcfg)
-        sb = rec.policy.storage_bytes
+        vb = rec.policy.vals_bytes  # packed value width (1 on q8/fp8)
         nbytes = (
-            plan.proj.hbm_bytes(value_bytes=sb)
-            + plan.back.hbm_bytes(value_bytes=sb)
+            plan.proj.hbm_bytes(value_bytes=vb)
+            + plan.back.hbm_bytes(value_bytes=vb)
         )
         return plan, rec, nbytes
 

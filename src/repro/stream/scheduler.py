@@ -92,13 +92,15 @@ class SlabPlan:
         return int(math.ceil(n_slices / self.y_slab))
 
 
-def _op_traffic(op, fuse: int, storage_bytes: int) -> tuple[float, float]:
+def _op_traffic(op, fuse: int, storage_bytes: int,
+                vals_bytes: int | None = None) -> tuple[float, float]:
     from ..kernels.traffic import op_segments_per_stage, spmm_traffic
 
     _, b, s, r, k = op.inds.shape
     t = spmm_traffic(
         b, s, r, k, op.winmap.shape[-1], fuse,
-        storage_bytes=storage_bytes, staging="fused",
+        storage_bytes=storage_bytes, vals_bytes=vals_bytes,
+        staging="fused",
         # measured winsegs tables for real plans, est capacity for
         # abstract ones -- same dispatch as xct_perf/dryrun, so the
         # BENCH_stream 'ai' the CI gate pins is the measured model
@@ -142,8 +144,9 @@ def suggest_slab(
 
     pol = get_policy(cfg.precision)
     sb = pol.storage_bytes
+    vb = pol.vals_bytes  # operator value width (1 for q8/fp8 tiers)
     proj, back = plan.proj, plan.back
-    fixed = proj.hbm_bytes(value_bytes=sb) + back.hbm_bytes(value_bytes=sb)
+    fixed = proj.hbm_bytes(value_bytes=vb) + back.hbm_bytes(value_bytes=vb)
     rows_pad, cols_pad = proj.n_rows_pad, proj.n_cols_pad
     # 3 tomo-space + 3 sino-space f32 CG vectors, + (1 or 2 with the
     # prefetch double buffer) host staging copies of slab-in + slab-out,
@@ -174,12 +177,14 @@ def suggest_slab(
     vmem = 0
     minis = y_slab // granule  # fused minibatches per batch member
     for op in (proj, back):
-        h, f = _op_traffic(op, cfg.fuse, sb)
+        h, f = _op_traffic(op, cfg.fuse, sb, vb)
         hbm += h * minis
         flops += f * minis
         _, _, s, r, k = op.inds.shape
         vmem = max(
-            vmem, vmem_bytes(r, k, op.winmap.shape[-1], cfg.fuse, sb)
+            vmem,
+            vmem_bytes(r, k, op.winmap.shape[-1], cfg.fuse, vb,
+                       win_bytes=sb),
         )
     return SlabPlan(
         y_slab=int(y_slab),

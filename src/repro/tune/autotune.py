@@ -65,6 +65,12 @@ DEFAULT_SPACE = {
     "comm_mode": ["direct", "rs", "hier", "sparse", "hier-sparse"],
     "dma": list(DMA_MODES),
     "slot_order": list(SLOT_ORDERS),
+    # precision ladder rungs worth sweeping: the paper's mixed default
+    # vs the quantized operator tier (int8 vals + per-block scales)
+    "precision": ["mixed", "q8"],
+    # hier-sparse slow-axis wire: native comm dtype vs int8+scale
+    # compression (only paired with comm_mode="hier-sparse")
+    "wire": ["native", "q8"],
 }
 
 
@@ -107,10 +113,12 @@ def modeled_objective(
             ),
         )
     plan = cache[key]
-    pol = get_policy(precision)
+    prec = knobs.get("precision", precision)
+    wire_fmt = knobs.get("wire", "native")
+    pol = get_policy(prec)
     rcfg = ReconConfig(
-        precision=precision, comm_mode=knobs["comm_mode"], fuse=fuse,
-        dma=knobs["dma"],
+        precision=prec, comm_mode=knobs["comm_mode"], fuse=fuse,
+        dma=knobs["dma"], wire=wire_fmt,
     )
     budget = int(mem_budget * knobs["slab_frac"])
     sp = suggest_slab(
@@ -122,13 +130,15 @@ def modeled_objective(
         _, b, s, rr, kk = op.inds.shape
         t = spmm_traffic(
             b, s, rr, kk, op.winmap.shape[-1], fuse,
-            storage_bytes=pol.storage_bytes, staging="fused",
+            storage_bytes=pol.storage_bytes,
+            vals_bytes=pol.vals_bytes, staging="fused",
             dma=knobs["dma"], slot_order=knobs["slot_order"],
         )
         issue_s += t["dma_issues"] * per_copy_overhead_s
         hbm_s += t["hbm_bytes"] / HW.hbm_bw
     wire = comm_volume(
         plan, knobs["comm_mode"], fuse, pol.comm_bytes, topology,
+        wire=wire_fmt,
     )
     ici_s = wire["ici"] / HW.ici_bw
     dci_s = wire["dci"] / HW.dci_bw
@@ -137,8 +147,14 @@ def modeled_objective(
     n_slabs = (
         int(math.ceil(n_slices / sp.y_slab)) if n_slices else 1
     )
+    # minibatches for the WHOLE volume count granules of n_slices: the
+    # last slab is partial, so slabs x full-slab minis would overbill
+    # exactly the candidates whose smaller operator grew y_slab
+    total_minis = (
+        int(math.ceil(n_slices / sp.granule)) if n_slices else minis
+    )
     per_mini = issue_s + hbm_s + ici_s + dci_s
-    total = per_mini * minis * n_slabs + n_slabs * SLAB_BOUNDARY_S
+    total = per_mini * total_minis + n_slabs * SLAB_BOUNDARY_S
     return {
         "total_seconds": total,
         "dma_issue_seconds": issue_s,
@@ -162,6 +178,8 @@ def _baseline_knobs(space: dict) -> dict:
         "comm_mode": "hier",
         "dma": "coalesced",
         "slot_order": "first_seen",
+        "precision": "mixed",
+        "wire": "native",
     }
 
 
@@ -210,6 +228,10 @@ def autotune(
         topology = sweep_topology(p_data)
     sp = dict(DEFAULT_SPACE)
     sp.update(space or {})
+    if "precision" not in (space or {}) and precision != "mixed":
+        # an explicit precision= restricts the axis (legacy callers
+        # tuned FOR a policy; a space override still wins)
+        sp["precision"] = [precision]
     overhead = (
         PER_COPY_OVERHEAD_S
         if per_copy_overhead_s is None
@@ -232,28 +254,44 @@ def autotune(
             for slot_order in sp["slot_order"]:
                 for dma in sp["dma"]:
                     for comm_mode in sp["comm_mode"]:
-                        for slab_frac in sp["slab_frac"]:
-                            knobs = {
-                                "block": tuple(block), "tile": tile,
-                                "slot_order": slot_order, "dma": dma,
-                                "comm_mode": comm_mode,
-                                "slab_frac": slab_frac,
-                            }
-                            try:
-                                obj = modeled_objective(
-                                    geo, knobs, **common
-                                )
-                            except ValueError:
-                                trials.append(
-                                    {**knobs, "feasible": False}
-                                )
-                                continue
-                            trial = {**knobs, **obj, "feasible": True}
-                            trials.append(trial)
-                            if best is None or (
-                                obj["total_seconds"] < best[0]
-                            ):
-                                best = (obj["total_seconds"], trial)
+                        for prec in sp["precision"]:
+                            for wire in sp["wire"]:
+                                # q8 wire compresses the hier-sparse
+                                # slow hop; other modes have none, so
+                                # the combo duplicates wire="native"
+                                if (wire != "native"
+                                        and comm_mode != "hier-sparse"):
+                                    continue
+                                for slab_frac in sp["slab_frac"]:
+                                    knobs = {
+                                        "block": tuple(block),
+                                        "tile": tile,
+                                        "slot_order": slot_order,
+                                        "dma": dma,
+                                        "comm_mode": comm_mode,
+                                        "precision": prec,
+                                        "wire": wire,
+                                        "slab_frac": slab_frac,
+                                    }
+                                    try:
+                                        obj = modeled_objective(
+                                            geo, knobs, **common
+                                        )
+                                    except ValueError:
+                                        trials.append(
+                                            {**knobs, "feasible": False}
+                                        )
+                                        continue
+                                    trial = {
+                                        **knobs, **obj, "feasible": True
+                                    }
+                                    trials.append(trial)
+                                    if best is None or (
+                                        obj["total_seconds"] < best[0]
+                                    ):
+                                        best = (
+                                            obj["total_seconds"], trial
+                                        )
     if best is None:
         raise ValueError(
             f"no feasible candidate under mem_budget={mem_budget}; "
@@ -266,7 +304,7 @@ def autotune(
         )[:3]
         timed = [(measure({k: t[k] for k in (
             "block", "tile", "slot_order", "dma", "comm_mode",
-            "slab_frac")}), t) for t in top]
+            "precision", "wire", "slab_frac")}), t) for t in top]
         best = (best[0], min(timed, key=lambda x: x[0])[1])
 
     win = best[1]
@@ -286,7 +324,8 @@ def autotune(
             "dma": win["dma"],
             "comm_mode": win["comm_mode"],
             "fuse": fuse,
-            "precision": precision,
+            "precision": win["precision"],
+            "wire": win["wire"],
             "y_slab": win["y_slab"],
         },
         workload={

@@ -219,6 +219,94 @@ def test_hilbert_socket_layout_improves_dedup(small_plan):
         assert hilbert < legacy, (name, legacy, hilbert)
 
 
+def test_q8_operator_pricing_at_brain_scale():
+    """Acceptance (ISSUE 8): the q8 tier halves the operator *value*
+    stream at xct-brain scale -- 1 B/nnz + the per-(block, stage) scale
+    table vs f16's 2 B/nnz -- and every byte-accounting consumer sees
+    it: ``hbm_bytes`` drops by the vals share (indices stay 2 B, so the
+    total lands at ~0.80x) and ``spmm_traffic`` prices a strictly
+    smaller operator stream / higher arithmetic intensity."""
+    from repro.kernels.traffic import op_segments_per_stage, spmm_traffic
+
+    ds = DATASETS["xct-brain"]
+    geo = XCTGeometry(n=ds.n, n_angles=ds.k)
+    plan = estimate_plan(
+        geo,
+        PartitionConfig(n_data=512, tile=32, rows_per_block=64,
+                        nnz_per_stage=64),
+    )
+    op = plan.proj
+    h_f16 = op.hbm_bytes(value_bytes=2)
+    h_q8 = op.hbm_bytes(value_bytes=1)
+    meta = op.hbm_bytes(value_bytes=0)  # indices + winmap/row_map only
+    # the value stream itself halves (scale table is B*S int32s against
+    # B*S*R*K packed slots: < 0.1% overhead at the 64x64 block)
+    assert 0.5 <= (h_q8 - meta) / (h_f16 - meta) <= 0.501
+    assert 0.79 <= h_q8 / h_f16 <= 0.81
+    traffic = {}
+    for vb in (2, 1):
+        _, b, s, r, k = op.inds.shape
+        traffic[vb] = spmm_traffic(
+            b, s, r, k, op.winmap.shape[-1], 16,
+            storage_bytes=2, vals_bytes=vb,
+            segments_per_stage=op_segments_per_stage(op),
+        )
+    assert traffic[1]["operator_bytes"] < traffic[2]["operator_bytes"]
+    assert traffic[1]["hbm_bytes"] < traffic[2]["hbm_bytes"]
+    ai = {vb: t["flops"] / t["hbm_bytes"] for vb, t in traffic.items()}
+    assert ai[1] > ai[2]
+
+
+def test_q8_wire_halves_hier_sparse_dci():
+    """Acceptance (ISSUE 8): int8 wire compression halves the
+    hier-sparse slow hop at xct-brain scale -- each crossing row ships
+    1 B instead of ``comm_bytes=2``, plus one f32 inv-scale per
+    (slow-peer, fused slice) -- and ``comm_volume`` (the launch-layer
+    view over ``CommPlan``) prices exactly that."""
+    from repro.core.partition import hier_sparse_wire_bytes
+
+    ds = DATASETS["xct-brain"]
+    geo = XCTGeometry(n=ds.n, n_angles=ds.k)
+    plan = estimate_plan(
+        geo,
+        PartitionConfig(n_data=512, tile=32, rows_per_block=64,
+                        nnz_per_stage=64),
+    )
+    topo = sweep_topology(512)
+    native = comm_volume(plan, "hier-sparse", 16, 2, topo)
+    q8 = comm_volume(plan, "hier-sparse", 16, 2, topo, wire="q8")
+    # the slow-axis all-to-all spans the node ICI rung and the DCI rung:
+    # its payload compresses on both, the socket reduce-scatter (the
+    # bulk of ICI) stays native -- so DCI halves, ICI dips slightly
+    assert 0.5 < q8["dci"] / native["dci"] <= 0.51
+    assert native["ici"] * 0.9 < q8["ici"] < native["ici"]
+    # ... and the closed form agrees with the CommPlan pricing per op
+    n_slow = math.prod(lv.size for lv in topo.levels[1:])
+    want = {"native": 0.0, "q8": 0.0}
+    for op in (plan.proj, plan.back):
+        params = exchange_volume_params(op, topo)
+        v2 = params["cross_rows"] // n_slow
+        for wire in ("native", "q8"):
+            want[wire] += hier_sparse_wire_bytes(
+                v2, n_slow, 16, comm_bytes=2, wire=wire
+            )
+    assert native["dci"] == pytest.approx(want["native"])
+    assert q8["dci"] == pytest.approx(want["q8"])
+
+
+def test_q8_wire_rejected_off_the_hier_sparse_ladder():
+    """wire="q8" compresses the hier-sparse slow-axis all-to-all; the
+    dense ladders have no such hop, so the plan must refuse rather than
+    silently price uncompressed wire."""
+    topo = Topology.from_sizes(
+        [("model", 2, "ici"), ("data", 2, "dci")]
+    )
+    with pytest.raises(ValueError, match="wire"):
+        topo.plan("hier", wire="q8")
+    with pytest.raises(ValueError, match="wire"):
+        topo.plan("hier-sparse", wire="fp4")
+
+
 def test_xct_analytic_fused_staging_eliminates_hbm_term(small_plan):
     """Acceptance: the dry-run cost model drops the staged-window HBM
     round trip on the fused path -- strictly less memory traffic and

@@ -435,6 +435,69 @@ def test_chunked_prefetch_matches_single_shot(dma):
     np.testing.assert_array_equal(np.asarray(full), np.asarray(chunked))
 
 
+@pytest.mark.parametrize("dma", ["coalesced", "per_row"])
+@pytest.mark.parametrize("chunked", [False, True])
+def test_quantized_kernel_matches_dequantized_reference(dma, chunked):
+    """Tentpole pin (ISSUE 8): int8 vals + per-block scales through the
+    fused kernel -- the scales ride scalar prefetch and are applied
+    inline in the FMA loop -- are BIT-exact vs running the same kernel
+    on eagerly dequantized f32 vals, on every DMA/chunking path.
+    (Power-of-two scales in f32 compute make dequant exact, so any
+    difference is a kernel wiring bug, not rounding.)"""
+    from repro.core.precision import (
+        dequantize_block_vals,
+        quantize_block_vals,
+    )
+
+    rng = np.random.default_rng(_seed("q8", dma, chunked))
+    b, s, r, k, buf, c, f = 6, 2, 8, 8, 16, 64, 4
+    inds = rng.integers(0, buf, size=(b, s, r, k)).astype(np.int16)
+    # spread block magnitudes over ~12 octaves so per-block scaling
+    # actually varies (a single global scale would also pass otherwise)
+    vals = (
+        rng.random((b, s, r, k))
+        * np.exp2(rng.integers(-6, 7, size=(b, s, 1, 1)))
+    ).astype(np.float32)
+    wm = np.stack([
+        np.stack([_winmap_from_runs(rng, buf, c, 1, 5)
+                  for _ in range(s)])
+        for _ in range(b)
+    ])
+    x = rng.normal(size=(c, f)).astype(np.float32)
+    q, exp = quantize_block_vals(jnp.asarray(vals), jnp.int8)
+    wide = dequantize_block_vals(q, exp, jnp.float32)
+    kw = dict(storage_dtype=jnp.float16, compute_dtype=jnp.float32,
+              dma=dma)
+    if chunked:
+        nseg = winmap_segments(wm).shape[-2]
+        kw["smem_budget"] = (
+            seg_smem_bytes(2, s, nseg) if dma == "coalesced"
+            else smem_bytes(2, s, buf)
+        )
+    args = (jnp.asarray(inds), jnp.asarray(wm), jnp.asarray(x))
+    out_q = apply_operator(args[0], q, args[1], args[2],
+                           scales=exp, **kw)
+    # reference path: f32 storage so the dequantized vals pass through
+    # the kernel unrounded; x pre-cast to the quantized path's f16
+    # window values (f16 -> f32 is exact) so vals are the ONLY delta
+    kw["storage_dtype"] = jnp.float32
+    out_ref = apply_operator(
+        args[0], wide, args[1], args[2].astype(jnp.float16), **kw
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_q), np.asarray(out_ref)
+    )
+    # the oracle path dequantizes eagerly and must agree too
+    out_oracle = apply_operator(
+        args[0], q, args[1], args[2], scales=exp,
+        storage_dtype=jnp.float16, compute_dtype=jnp.float32,
+        use_ref=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_q), np.asarray(out_oracle), rtol=1e-6, atol=1e-6
+    )
+
+
 def test_budget_guards_name_offending_dimension():
     """Satellite: over-budget blocks raise a named ValueError instead of
     sizing silently (Mosaic would fail opaquely)."""

@@ -224,6 +224,39 @@ def test_hbm_bytes_counts_resident_operator_only(small_system):
     assert op.hbm_bytes() == want
 
 
+def test_hbm_bytes_prices_mixed_width_shard(small_system):
+    """Satellite (ISSUE 8): ``value_bytes=None`` reads the vals width
+    off the array itself, so a shard already packed narrow (int8 vals
+    next to int16 indices) prices correctly -- including the per-(block,
+    stage) int32 scale table the quantized tier carries -- instead of
+    assuming vals width == vector storage width."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.precision import quantize_block_vals
+
+    _, _, plan = small_system
+    op = plan.proj
+    q, _ = quantize_block_vals(jnp.asarray(op.vals), jnp.int8)
+    packed = dataclasses.replace(op, vals=np.asarray(q))
+    meta = (
+        op.winmap.size + op.winsegs.size + op.segoff.size
+        + op.row_map.size
+    ) * 4
+    scale_table = int(np.prod(op.inds.shape[:3])) * 4
+    assert packed.hbm_bytes(value_bytes=None) == (
+        op.padded_nnz * (1 + 2) + scale_table + meta
+    )
+    # explicit width still wins over the array dtype (the shards
+    # normally hold the f32 master copy priced at the policy's width)
+    assert packed.hbm_bytes(value_bytes=2) == op.hbm_bytes()
+    # the master-copy f32 shard under None prices 4-byte vals, no table
+    assert op.hbm_bytes(value_bytes=None) == (
+        op.padded_nnz * (4 + 2) + meta
+    )
+
+
 # --------------------------------------------------------------------- #
 # plan_key: the serve layer's cache fingerprint
 # --------------------------------------------------------------------- #

@@ -55,6 +55,14 @@ GUARDED_FIELDS = {
     # here first, see the slot-reordering PR)
     "segs_mean": ("up", "absolute"),
     "dma_issues": ("down", "absolute"),
+    # quantized tier (ISSUE 8): both deterministic byte counts.
+    # hbm_bytes = measured resident operator footprint at the row's
+    # vals width (the q8 rows halve the value stream); comm_bytes =
+    # per-device wire bytes of the comm_volumes row (the q8 wire rows
+    # halve the slow hop).  Gate DOWNWARD so the quantization wins
+    # cannot silently regress.
+    "hbm_bytes": ("down", "absolute"),
+    "comm_bytes": ("down", "absolute"),
 }
 
 UPDATE_HINT = """\

@@ -33,6 +33,7 @@ DOCTEST_MODULES = [
     "repro.launch.dryrun",
     "repro.launch.xct_perf",
     "repro.kernels.traffic",
+    "repro.core.partition",
     "repro.tune.passport",
     "repro.serve.admission",
     "repro.serve.batching",

@@ -10,7 +10,7 @@ subsystem's load-bearing behaviors end to end:
   * the argmin beats the untuned default (first-seen slots, stock
     block, whole-budget slabs) on modeled DMA-issue seconds -- the term
     slot reordering + run-length coalescing attack -- and does not
-    regress the slow-link (DCI) wire volume;
+    regress the modeled wire seconds (ICI + DCI);
   * the passport round-trips through the consumer entry point
     (``resolve_passport``) and carries the knobs every consumer reads.
 
@@ -53,7 +53,8 @@ def main() -> int:
     loaded = resolve_passport(d1, p1.fingerprint)
     assert loaded == p1, "consumer resolve round-trip changed the passport"
     for knob in ("rows_per_block", "nnz_per_stage", "tile", "slot_order",
-                 "dma", "comm_mode", "fuse", "precision", "y_slab"):
+                 "dma", "comm_mode", "fuse", "precision", "wire",
+                 "y_slab"):
         assert knob in loaded.knobs, f"passport missing knob {knob!r}"
 
     tuned, base = p1.objective, p1.objective["baseline"]
@@ -62,12 +63,17 @@ def main() -> int:
         f"DMA-issue seconds: {tuned['dma_issue_seconds']:.4g} vs "
         f"{base['dma_issue_seconds']:.4g}"
     )
-    # no MATERIAL slow-link regression: a different block shape pads
-    # shard rows slightly differently (sub-0.1% wire-byte noise), but a
-    # comm-mode downgrade (hier -> direct is ~250x DCI here) must trip
-    assert tuned["dci_bytes"] <= 1.001 * base["dci_bytes"], (
-        "tuned config regresses slow-link (DCI) wire volume: "
-        f"{tuned['dci_bytes']:.4g} vs {base['dci_bytes']:.4g}"
+    # no MATERIAL wire regression: the argmin may trade the two link
+    # classes against each other (hier-sparse ships more DCI but less
+    # ICI than the hier ladder at 2 pods, and the q8 wire halves that
+    # DCI), so guard the modeled wire SECONDS, where the link speeds
+    # weigh the trade; a comm-mode downgrade (direct is ~250x DCI and
+    # ~2x ICI here) still trips by orders of magnitude
+    tuned_wire = tuned["ici_seconds"] + tuned["dci_seconds"]
+    base_wire = base["ici_seconds"] + base["dci_seconds"]
+    assert tuned_wire <= 1.001 * base_wire, (
+        "tuned config regresses modeled wire seconds: "
+        f"{tuned_wire:.4g} vs {base_wire:.4g}"
     )
     feas = sum(t["feasible"] for t in trials)
     assert feas > 1, f"sweep degenerate: {feas} feasible candidate(s)"
