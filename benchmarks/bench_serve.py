@@ -87,14 +87,14 @@ def run(n: int = 48, iters: int = 6, quick: bool = False):
         ]
 
         st = srv.stats()
-        firsts = [j.telemetry.first_slab_seconds for j in jobs]
+        firsts = [j.telemetry.first_slab_s for j in jobs]
         cold = [j for j in jobs if j.telemetry.plan_cold]
         warm = [j for j in jobs if not j.telemetry.plan_cold]
         cold_first = float(np.mean(
-            [j.telemetry.first_slab_seconds for j in cold]
+            [j.telemetry.first_slab_s for j in cold]
         ))
         warm_first = float(np.mean(
-            [j.telemetry.first_slab_seconds for j in warm]
+            [j.telemetry.first_slab_s for j in warm]
         ))
         emit(
             "serve/mix6",

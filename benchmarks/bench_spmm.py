@@ -39,6 +39,9 @@ from repro.kernels.ops import (
     winmap_segments,
 )
 from repro.kernels.traffic import spmm_traffic
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.trace import span as obs_span
 
 from .common import emit, timeit
 
@@ -146,7 +149,9 @@ def calibrate_per_copy_overhead(
 
 
 def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
-        ab: bool = True):
+        ab: bool = True, trace: bool = False):
+    if trace:
+        obs_trace.enable()
     geo = XCTGeometry(n=n, n_angles=n // 2)
     a = build_system_matrix(geo)
     plan = build_plan(
@@ -215,7 +220,13 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
                                    dma=dm, winsegs=sg, segoff=so,
                                    scales=sc)
                 )
-                t = timeit(fn, x, reps=3 if not quick else 1)
+                # the span wraps the timed cell, never the kernel
+                # inner loop: with tracing off this is two clock reads
+                # per CELL (the no-overhead acceptance)
+                with obs_span(
+                    f"spmm/{prec}/{tag}", f=f
+                ):
+                    t = timeit(fn, x, reps=3 if not quick else 1)
                 tr = spmm_traffic(
                     b, s, r, k, buf, f,
                     storage_bytes=jnp.dtype(sdt).itemsize,
@@ -244,6 +255,9 @@ def run(n: int = 64, fusings=(1, 2, 4, 8, 16, 32), quick: bool = False,
                     f"hbm_bytes={op_hbm} "
                     f"roofline={tpu_gflops:.0f}GF/s" + extra,
                 )
+    if trace:
+        obs_export.write_chrome_trace("TRACE_spmm_fusing.json")
+        print("trace written to TRACE_spmm_fusing.json")
 
 
 if __name__ == "__main__":
@@ -255,5 +269,9 @@ if __name__ == "__main__":
         "--no-ab", dest="ab", action="store_false",
         help="skip the per-row / gather baseline arms",
     )
+    ap.add_argument(
+        "--trace", action="store_true",
+        help="record repro.obs spans; writes TRACE_spmm_fusing.json",
+    )
     args = ap.parse_args()
-    run(quick=args.quick, ab=args.ab)
+    run(quick=args.quick, ab=args.ab, trace=args.trace)

@@ -30,6 +30,8 @@ import numpy as np
 from repro.core.geometry import XCTGeometry, build_system_matrix
 from repro.core.partition import PartitionConfig, build_plan
 from repro.core.recon import ReconConfig, Reconstructor
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.stream import SlabStore, reconstruct_streaming, simulate_to_store
 from repro.stream.scheduler import SlabPlan, suggest_slab  # noqa: F401
 
@@ -44,7 +46,9 @@ MODES = {
 
 
 def run(n: int = 48, iters: int = 6, quick: bool = False,
-        ab: bool = True):
+        ab: bool = True, trace: bool = False):
+    if trace:
+        obs_trace.enable()
     if quick:
         n, iters = 32, 4
     y_total = 8 if quick else 16
@@ -90,9 +94,13 @@ def run(n: int = 48, iters: int = 6, quick: bool = False,
                     1 << 40, n_slices=y_slab, overlap=overlap,
                 )
                 ai = sp.slab_flops / max(sp.slab_hbm_bytes, 1.0)
-                up_ms = 1e3 * float(np.mean(res.upload_seconds))
-                solve_ms = 1e3 * float(np.mean(res.solve_seconds))
-                load_ms = 1e3 * float(np.mean(res.load_seconds))
+                up_s = float(np.mean(res.upload_s))
+                solve_s = float(np.mean(res.solve_s))
+                load_s = float(np.mean(res.load_s))
+                # legacy *_ms fields kept one release alongside *_s
+                up_ms, solve_ms, load_ms = (
+                    1e3 * up_s, 1e3 * solve_s, 1e3 * load_s
+                )
                 emit(
                     f"stream/slab{y_slab}/{tag}",
                     t * 1e6,
@@ -100,12 +108,17 @@ def run(n: int = 48, iters: int = 6, quick: bool = False,
                     f"slabs={-(-y_total // y_slab)} iters={iters} "
                     f"ai={ai:.3f}flop/B "
                     f"slab_hbm_mb={sp.slab_hbm_bytes / 2**20:.1f} "
+                    f"load_s={load_s:.4f} upload_s={up_s:.4f} "
+                    f"solve_s={solve_s:.4f} "
                     f"load_ms={load_ms:.1f} upload_ms={up_ms:.1f} "
                     f"solve_ms={solve_ms:.1f} "
                     f"upload_hidden={int(res.upload_overlapped)}",
                 )
     finally:
         shutil.rmtree(workdir, ignore_errors=True)
+    if trace:
+        obs_export.write_chrome_trace("TRACE_stream.json")
+        print("trace written to TRACE_stream.json")
 
 
 if __name__ == "__main__":
@@ -117,5 +130,9 @@ if __name__ == "__main__":
         "--no-ab", dest="ab", action="store_false",
         help="run only the production overlap_dev schedule",
     )
+    ap.add_argument(
+        "--trace", action="store_true",
+        help="record repro.obs spans; writes TRACE_stream.json",
+    )
     args = ap.parse_args()
-    run(quick=args.quick, ab=args.ab)
+    run(quick=args.quick, ab=args.ab, trace=args.trace)

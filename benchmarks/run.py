@@ -28,6 +28,12 @@ def main(argv=None) -> None:
         help="comma list: "
              "spmm,recon,comms,scaling,convergence,stream,serve",
     )
+    ap.add_argument(
+        "--trace", action="store_true",
+        help="record repro.obs spans in the benches that support it "
+             "(spmm, stream); writes TRACE_<suite>.json next to the "
+             "BENCH artifacts",
+    )
     args = ap.parse_args(argv)
 
     from . import (
@@ -53,7 +59,10 @@ def main(argv=None) -> None:
         if name not in only:
             continue
         try:
-            fn(quick=args.quick)
+            if args.trace and name in ("spmm", "stream"):
+                fn(quick=args.quick, trace=True)
+            else:
+                fn(quick=args.quick)
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

@@ -27,6 +27,9 @@ from jax.sharding import PartitionSpec as P
 
 from ..dist import Topology
 from ..dist.collectives import sparse_exchange
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+from ..obs.trace import span as obs_span
 from ..kernels.ops import (
     apply_operator,
     sort_segments_by_class,
@@ -582,18 +585,20 @@ class Reconstructor:
         transfer lands so the caller's timing is honest.
         """
         self._check_slices(sino_nat.shape[1])
-        y = self.pack_sino(sino_nat)
-        m = np.abs(y).max(axis=0)
-        # target 1.0: keeps every CG vector (and the fp16 CG scalars)
-        # O(n * K) at most, inside half range for any practical geometry
-        scale = np.exp2(
-            np.round(np.log2(1.0 / np.maximum(m, 1e-30)))
-        ).astype(np.float32)
-        _, vec = self._specs()
-        y_dev = jax.device_put(
-            y * scale, jax.sharding.NamedSharding(self.mesh, vec)
-        )
-        jax.block_until_ready(y_dev)
+        with obs_span("recon/stage", slices=int(sino_nat.shape[1])):
+            y = self.pack_sino(sino_nat)
+            m = np.abs(y).max(axis=0)
+            # target 1.0: keeps every CG vector (and the fp16 CG
+            # scalars) O(n * K) at most, inside half range for any
+            # practical geometry
+            scale = np.exp2(
+                np.round(np.log2(1.0 / np.maximum(m, 1e-30)))
+            ).astype(np.float32)
+            _, vec = self._specs()
+            y_dev = jax.device_put(
+                y * scale, jax.sharding.NamedSharding(self.mesh, vec)
+            )
+            jax.block_until_ready(y_dev)
         return StagedSlab(
             y=y_dev, scale=scale, n_slices=int(sino_nat.shape[1])
         )
@@ -618,5 +623,72 @@ class Reconstructor:
             if x0_nat is not None
             else np.zeros((self.tomo_pad, staged.n_slices), np.float32)
         )
-        x, res = self._get_fn("cg", iters)(self._arrays, staged.y, x0)
+        with obs_span(
+            "recon/solve", iters=iters, slices=staged.n_slices
+        ) as sp:
+            x, res = self._get_fn("cg", iters)(self._arrays, staged.y, x0)
+            sp.fence(x)  # async dispatch must not end the span early
+        self._emit_exchange(iters, staged.n_slices)
         return self.unpack_tomo(x) / scale, np.asarray(res) / scale
+
+    def _emit_exchange(self, iters: int, n_slices: int):
+        """Annotate a finished solve with its modeled wire traffic.
+
+        The exchanges themselves run inside the jitted shard_map --
+        host spans cannot time them -- so when tracing is on we emit a
+        ``recon/exchange`` instant carrying the *modeled* per-link
+        bytes of the whole solve (``launch.xct_perf.comm_volume`` per
+        fused minibatch, x ``iters + 1`` operator applications, the
+        same pricing the autotuner and ``obs.drift`` use) and bump the
+        ``comm_bytes_total{link=}`` / ``dma_issues_total`` counters.
+        """
+        tracer = obs_trace.get_tracer()
+        if not tracer.enabled:
+            return
+        per_mini = getattr(self, "_obs_traffic", None)
+        if per_mini is None:
+            from ..kernels.traffic import (
+                op_segments_per_stage,
+                spmm_traffic,
+            )
+            from ..launch.xct_perf import comm_volume
+
+            wire = comm_volume(
+                self.plan, self.cfg.comm_mode, self.cfg.fuse,
+                self.policy.comm_bytes, self.topology,
+                wire=self.cfg.wire,
+            )
+            issues = 0.0
+            for op in (self.plan.proj, self.plan.back):
+                _, b, s, r, k = op.inds.shape
+                issues += spmm_traffic(
+                    b, s, r, k, op.winmap.shape[-1], self.cfg.fuse,
+                    storage_bytes=self.policy.storage_bytes,
+                    vals_bytes=self.policy.vals_bytes,
+                    staging=self.cfg.staging,
+                    dma=self.cfg.dma,
+                    segments_per_stage=op_segments_per_stage(op),
+                )["dma_issues"]
+            per_mini = self._obs_traffic = {
+                "ici": wire["ici"], "dci": wire["dci"],
+                "dma_issues": issues,
+            }
+        minis = n_slices // (self.n_batch * self.cfg.fuse)
+        apps = iters + 1  # CGNR: initial A/A^T pair + one per iteration
+        scale = minis * apps
+        tracer.instant(
+            "recon/exchange",
+            ici_bytes=per_mini["ici"] * scale,
+            dci_bytes=per_mini["dci"] * scale,
+            iters=iters,
+            slices=n_slices,
+        )
+        obs_metrics.inc(
+            "comm_bytes_total", per_mini["ici"] * scale, link="ici"
+        )
+        obs_metrics.inc(
+            "comm_bytes_total", per_mini["dci"] * scale, link="dci"
+        )
+        obs_metrics.inc(
+            "dma_issues_total", per_mini["dma_issues"] * scale, op="spmm"
+        )

@@ -67,7 +67,18 @@ def main(argv=None):
              "passport (by hardware fingerprint) fills every knob the "
              "command line left at its default",
     )
+    ap.add_argument(
+        "--trace", default=None, metavar="OUT.json",
+        help="record repro.obs spans and write a Chrome trace-event "
+             "JSON (load it at ui.perfetto.dev); with --stream also "
+             "prints the modeled-vs-measured drift report",
+    )
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from ..obs import trace as obs_trace
+
+        obs_trace.enable()
 
     # Passport knobs apply ONLY where the flag still holds its parser
     # default: an explicit command-line choice always beats the tuner.
@@ -141,7 +152,27 @@ def main(argv=None):
         f"rel err mean {rel.mean():.4f} | residual "
         f"{res[0,0]:.3e} -> {res[-1,0]:.3e}"
     )
+    _finish_trace(args, rec)
     return x, res
+
+
+def _finish_trace(args, rec):
+    """--trace epilogue: write the Perfetto JSON + print drift."""
+    if not args.trace:
+        return
+    from ..obs import drift, export
+    from ..obs import trace as obs_trace
+
+    tracer = obs_trace.get_tracer()
+    export.write_chrome_trace(args.trace, tracer)
+    print(f"trace written to {args.trace} (load at ui.perfetto.dev)")
+    try:
+        report = drift.drift_report(
+            tracer, rec=rec, iters=args.iters, n_slices=args.slices,
+        )
+        print(report.render())
+    except ValueError as e:  # e.g. odd slice counts -- trace still lands
+        print(f"drift report unavailable: {e}")
 
 
 def _run_streaming(args, geo, a, rec):
@@ -185,9 +216,9 @@ def _run_streaming(args, geo, a, rec):
     if result.solved:
         split = (
             f" | per-slab load/upload/solve "
-            f"{np.mean(result.load_seconds) * 1e3:.0f}/"
-            f"{np.mean(result.upload_seconds) * 1e3:.0f}/"
-            f"{np.mean(result.solve_seconds) * 1e3:.0f} ms"
+            f"{np.mean(result.load_s) * 1e3:.0f}/"
+            f"{np.mean(result.upload_s) * 1e3:.0f}/"
+            f"{np.mean(result.solve_s) * 1e3:.0f} ms"
             + (" (upload hidden)" if result.upload_overlapped else "")
         )
     print(
@@ -198,6 +229,7 @@ def _run_streaming(args, geo, a, rec):
         f"{args.slices / dt:.1f} slices/s | rel err mean "
         f"{rel.mean():.4f}" + split
     )
+    _finish_trace(args, rec)
     return result, rel
 
 

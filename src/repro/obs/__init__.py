@@ -1,0 +1,53 @@
+"""repro.obs: unified tracing + metrics spine.
+
+* :mod:`~repro.obs.trace` -- nestable, thread-aware spans on one
+  monotonic clock (``with span("stream/solve", slab=j0): ...``).
+* :mod:`~repro.obs.metrics` -- counters / gauges / histograms with a
+  Prometheus text exposition.
+* :mod:`~repro.obs.export` -- Chrome trace-event JSON (Perfetto) +
+  schema validation against the checked-in
+  ``chrome_trace.schema.json``.
+* :mod:`~repro.obs.drift` -- modeled-vs-measured per-phase drift
+  report joining span totals against the traffic / comm-volume models.
+
+See ``docs/observability.md`` for the span taxonomy and workflows.
+"""
+from .drift import drift_report, measured_phases, modeled_phases
+from .export import (
+    chrome_trace,
+    load_schema,
+    validate_chrome_trace,
+    write_chrome_trace,
+)
+from .metrics import Metrics, get_metrics, set_metrics
+from .trace import (
+    Span,
+    Tracer,
+    disable,
+    enable,
+    get_tracer,
+    instant,
+    set_tracer,
+    span,
+)
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "get_tracer",
+    "set_tracer",
+    "enable",
+    "disable",
+    "span",
+    "instant",
+    "Metrics",
+    "get_metrics",
+    "set_metrics",
+    "chrome_trace",
+    "write_chrome_trace",
+    "load_schema",
+    "validate_chrome_trace",
+    "drift_report",
+    "measured_phases",
+    "modeled_phases",
+]

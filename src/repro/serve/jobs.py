@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 
 import numpy as np
 
@@ -72,22 +73,56 @@ class JobSpec:
 class JobTelemetry:
     """Per-request split, aggregated over the job's slabs.
 
-    ``queue_seconds`` is submit -> first slab *starts*;
-    ``first_slab_seconds`` is submit -> first slab *published* (the
-    queue-to-first-slab the warm-path acceptance compares: a cache hit
-    skips the plan build, so a warm job's number is strictly below the
-    cold job's).  The load/upload/solve sums mirror the
-    ``stream.StreamResult`` per-slab fields.
+    ``queue_s`` is submit -> first slab *starts*; ``first_slab_s`` is
+    submit -> first slab *published* (the queue-to-first-slab the
+    warm-path acceptance compares: a cache hit skips the plan build, so
+    a warm job's number is strictly below the cold job's).  The
+    load/upload/solve sums mirror the ``stream.StreamResult`` per-slab
+    fields.  Timing fields follow the repo-wide ``*_s`` convention
+    (seconds, float); the old ``*_seconds`` names remain as deprecated
+    read aliases for one release.
+
+    A FAILED job still carries telemetry up to the failure point:
+    whatever slabs completed keep their split, ``total_s`` covers
+    submit -> failure, and ``error_type`` names the exception class
+    (the failing ``serve/slab`` span records the same under its
+    ``exception`` attr).
     """
 
-    queue_seconds: float = 0.0
-    first_slab_seconds: float = 0.0
-    total_seconds: float = 0.0
-    load_seconds: float = 0.0
-    upload_seconds: float = 0.0
-    solve_seconds: float = 0.0
+    queue_s: float = 0.0
+    first_slab_s: float = 0.0
+    total_s: float = 0.0
+    load_s: float = 0.0
+    upload_s: float = 0.0
+    solve_s: float = 0.0
     n_slabs: int = 0
     plan_cold: bool = False  # this job paid the plan build
+    error_type: str | None = None  # exception class name (failed jobs)
+
+
+def _alias(cls, old: str, new: str):
+    """Deprecated ``*_seconds`` read alias for a renamed ``*_s`` field."""
+    def get(self):
+        warnings.warn(
+            f"{cls.__name__}.{old} is deprecated; use .{new}",
+            DeprecationWarning, stacklevel=2,
+        )
+        return getattr(self, new)
+
+    get.__name__ = old
+    get.__doc__ = f"Deprecated alias for :attr:`{new}`."
+    setattr(cls, old, property(get))
+
+
+for _old, _new in (
+    ("queue_seconds", "queue_s"),
+    ("first_slab_seconds", "first_slab_s"),
+    ("total_seconds", "total_s"),
+    ("load_seconds", "load_s"),
+    ("upload_seconds", "upload_s"),
+    ("solve_seconds", "solve_s"),
+):
+    _alias(JobTelemetry, _old, _new)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,7 +199,7 @@ class Job:
         with self._lock:
             self.previews.append(pv)
             if self.telemetry.n_slabs == 0:
-                self.telemetry.first_slab_seconds = now
+                self.telemetry.first_slab_s = now
             self.telemetry.n_slabs += 1
         if self._on_preview is not None:
             self._on_preview(self, pv)

@@ -26,6 +26,8 @@ import time
 from collections import OrderedDict
 from typing import Callable
 
+from ..obs import metrics as obs_metrics
+
 __all__ = ["PlanCache", "PlanEntry"]
 
 
@@ -124,9 +126,11 @@ class PlanCache:
             entry = self._entries.get(key)
             if entry is not None:
                 self.hits += 1
+                obs_metrics.inc("plan_cache_hits_total")
                 self._entries.move_to_end(key)  # LRU touch
                 return entry, True
             self.misses += 1
+            obs_metrics.inc("plan_cache_misses_total")
             t0 = time.perf_counter()
             plan, rec, nbytes = build()
             self.builds += 1
@@ -173,3 +177,4 @@ class PlanCache:
                 return
             self._entries.pop(victim)
             self.evictions += 1
+            obs_metrics.inc("plan_cache_evictions_total")

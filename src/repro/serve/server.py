@@ -46,6 +46,8 @@ import numpy as np
 from ..core.partition import PartitionConfig, build_plan, plan_key
 from ..core.recon import ReconConfig, Reconstructor
 from ..dist import Topology
+from ..obs import metrics as obs_metrics
+from ..obs.trace import span as obs_span
 from ..stream.scheduler import Prefetcher, PrefetchError
 from ..stream.store import SlabStore
 from .admission import AdmissionController
@@ -149,6 +151,7 @@ class ReconServer:
                       f"{spec.geo.n_rays}",
             )
             self._rejected += 1
+            obs_metrics.inc("serve_jobs_total", status="rejected")
             return job
         try:
             # price against the real plan when one is already cached
@@ -167,6 +170,7 @@ class ReconServer:
         except ValueError as e:
             job._transition("rejected", error=str(e))
             self._rejected += 1
+            obs_metrics.inc("serve_jobs_total", status="rejected")
             return job
         with self._lock:
             if self.admission.queue_full(len(self._queue)):
@@ -176,9 +180,11 @@ class ReconServer:
                           f"{self.admission.max_queue})",
                 )
                 self._rejected += 1
+                obs_metrics.inc("serve_jobs_total", status="rejected")
                 return job
             self._costs[job.id] = cost
             self._queue.append(job)
+            obs_metrics.set_gauge("serve_queue_depth", len(self._queue))
         self._wake.set()
         return job
 
@@ -199,6 +205,7 @@ class ReconServer:
             )
             for job in batch:
                 self._queue.remove(job)
+            obs_metrics.set_gauge("serve_queue_depth", len(self._queue))
         if not batch:
             return 0
         self._run_batch(batch)
@@ -217,9 +224,7 @@ class ReconServer:
         key = batch[0].plan_key
         for job in batch:  # queue wait ends when the batch is picked
             job._transition("running")
-            job.telemetry.queue_seconds = (
-                time.perf_counter() - job.submit_t
-            )
+            job.telemetry.queue_s = time.perf_counter() - job.submit_t
         entry, hit = self.cache.get_or_build(
             key, lambda: self._build(batch[0])
         )
@@ -291,17 +296,25 @@ class ReconServer:
             try:
                 for pos, (task, staged) in enumerate(pre):
                     job, (j0, j1) = task
-                    t1 = time.perf_counter()
-                    x, r = rec.reconstruct(
-                        staged, iters=job.spec.iters
-                    )
-                    solve_s = time.perf_counter() - t1
-                    path = job.volume.write(j0, np.asarray(x))
+                    lane = f"tenant:{job.spec.tenant}"
+                    # a solve/write failure propagates through these
+                    # spans, so the failing slab's span records the
+                    # exception type before _fail() sees it
+                    with obs_span(
+                        "serve/slab", lane=lane, job=job.id, j0=j0
+                    ):
+                        with obs_span(
+                            "serve/solve", lane=lane, job=job.id
+                        ) as sp_solve:
+                            x, r = rec.reconstruct(
+                                staged, iters=job.spec.iters
+                            )
+                        path = job.volume.write(j0, np.asarray(x))
                     job.resnorms[:, j0:j1] = r
                     tm = pre.times.get(pos, {})
-                    job.telemetry.load_seconds += tm.get("load", 0.0)
-                    job.telemetry.upload_seconds += tm.get("stage", 0.0)
-                    job.telemetry.solve_seconds += solve_s
+                    job.telemetry.load_s += tm.get("load", 0.0)
+                    job.telemetry.upload_s += tm.get("stage", 0.0)
+                    job.telemetry.solve_s += sp_solve.duration_s
                     job.publish_preview(j0, j1, path)
                     with self._lock:
                         self.served[job.spec.tenant] = (
@@ -310,17 +323,20 @@ class ReconServer:
                         )
                     pending[job.id] -= 1
                     if pending[job.id] == 0:
-                        job.telemetry.total_seconds = (
+                        job.telemetry.total_s = (
                             time.perf_counter() - job.submit_t
                         )
                         job._transition("done")
                         self._completed += 1
+                        obs_metrics.inc(
+                            "serve_jobs_total", status="done"
+                        )
                     consumed = pos + 1
             except PrefetchError as e:
                 # the failing fetch/stage names its job; everything
                 # already yielded for other jobs is safely on disk
                 bad, _ = e.item
-                self._fail(bad, f"slab load failed: {e}")
+                self._fail(bad, f"slab load failed: {e}", exc=e.cause)
                 tasks = [
                     t for t in tasks[e.index + 1:]
                     if t[0].status == "running"
@@ -328,7 +344,7 @@ class ReconServer:
                 continue
             except Exception as e:  # noqa: BLE001 - solve/write failure
                 bad = tasks[consumed][0]
-                self._fail(bad, f"{type(e).__name__}: {e}")
+                self._fail(bad, f"{type(e).__name__}: {e}", exc=e)
                 tasks = [
                     t for t in tasks[consumed + 1:]
                     if t[0].status == "running"
@@ -336,9 +352,16 @@ class ReconServer:
                 continue
             break
 
-    def _fail(self, job: Job, msg: str):
+    def _fail(self, job: Job, msg: str, exc: BaseException | None = None):
+        # a failed job still reports terminal-phase timing: total_s
+        # covers submit -> failure, and the slab split it accumulated
+        # before dying stays (the telemetry gap the obs PR closed)
+        job.telemetry.total_s = time.perf_counter() - job.submit_t
+        if exc is not None:
+            job.telemetry.error_type = type(exc).__name__
         job._transition("failed", error=msg)
         self._failed += 1
+        obs_metrics.inc("serve_jobs_total", status="failed")
 
     # ------------------------------------------------------------------ #
     # background mode
@@ -394,3 +417,17 @@ class ReconServer:
             hit_rate=self.cache.hit_rate,
         )
         return s
+
+    def metrics_text(self) -> str:
+        """Prometheus text snapshot of the process metrics registry.
+
+        Refreshes the point-in-time gauges first so a scrape is
+        self-consistent; counters (``serve_jobs_total{status=}``,
+        ``plan_cache_*_total``, ``comm_bytes_total{link=}``, ...)
+        accumulate as the wired paths bump them.  The exposition is
+        byte-deterministic for a given registry state (sorted series;
+        see ``repro.obs.metrics``).
+        """
+        with self._lock:
+            obs_metrics.set_gauge("serve_queue_depth", len(self._queue))
+        return obs_metrics.render_prometheus()

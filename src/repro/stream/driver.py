@@ -36,13 +36,15 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
+import warnings
 
 import numpy as np
 
 from ..ckpt import checkpoint as ckpt
 from ..core.recon import StagedSlab
 from ..dist.fault import suggest_checkpoint_period
+from ..obs import metrics as obs_metrics
+from ..obs.trace import span
 from .scheduler import Prefetcher, suggest_slab
 from .store import SlabStore
 
@@ -53,23 +55,53 @@ __all__ = ["StreamResult", "reconstruct_streaming"]
 
 @dataclasses.dataclass
 class StreamResult:
-    """What one (possibly resumed, possibly interrupted) drain did."""
+    """What one (possibly resumed, possibly interrupted) drain did.
+
+    Timing fields use the repo-wide ``*_s`` convention (seconds,
+    float); the old ``*_seconds`` names remain as deprecated aliases
+    for one release.  Every value is a span duration from
+    :mod:`repro.obs.trace` -- with tracing enabled the exported
+    ``stream/*`` spans and these fields are the same numbers.
+    """
 
     volume: SlabStore  # the output store (complete iff slabs all done)
     resnorms: np.ndarray  # [iters, Y] per-slice residuals (0 = unsolved)
     y_slab: int
     solved: list  # slab starts solved by THIS call
     skipped: list  # slab starts skipped via the resume manifest
-    slab_seconds: list  # critical-path wall time per solved slab
+    slab_s: list  # critical-path wall seconds per solved slab
     # the per-slab pipeline split (parallel lists to ``solved``):
-    load_seconds: list = dataclasses.field(default_factory=list)
-    upload_seconds: list = dataclasses.field(default_factory=list)
-    solve_seconds: list = dataclasses.field(default_factory=list)
+    load_s: list = dataclasses.field(default_factory=list)
+    upload_s: list = dataclasses.field(default_factory=list)
+    solve_s: list = dataclasses.field(default_factory=list)
     upload_overlapped: bool = False  # uploads ran off the critical path
 
     @property
     def complete(self) -> bool:
         return self.volume.complete()
+
+
+def _alias(cls, old: str, new: str):
+    """Deprecated ``*_seconds`` read alias for a renamed ``*_s`` field."""
+    def get(self):
+        warnings.warn(
+            f"{cls.__name__}.{old} is deprecated; use .{new}",
+            DeprecationWarning, stacklevel=2,
+        )
+        return getattr(self, new)
+
+    get.__name__ = old
+    get.__doc__ = f"Deprecated alias for :attr:`{new}`."
+    setattr(cls, old, property(get))
+
+
+for _old, _new in (
+    ("slab_seconds", "slab_s"),
+    ("load_seconds", "load_s"),
+    ("upload_seconds", "upload_s"),
+    ("solve_seconds", "solve_s"),
+):
+    _alias(StreamResult, _old, _new)
 
 
 def _manifest_like(n_slabs: int, iters: int, n_slices: int) -> dict:
@@ -182,23 +214,23 @@ def reconstruct_streaming(
     def save_manifest():
         if ckpt_dir is None:
             return 0.0
-        t0 = time.perf_counter()
-        ckpt.save(
-            ckpt_dir, int(done.sum()),
-            {"done": done, "res": res,
-             "y_slab": np.asarray(y_slab, np.int64)},
-        )
-        return time.perf_counter() - t0
+        with span("stream/ckpt", step=int(done.sum())) as sp:
+            ckpt.save(
+                ckpt_dir, int(done.sum()),
+                {"done": done, "res": res,
+                 "y_slab": np.asarray(y_slab, np.int64)},
+            )
+        return sp.duration_s
 
     pending = [i for i in range(len(slabs)) if not done[i]]
     if max_slabs is not None:
         pending = pending[:max_slabs]
     skipped = [slabs[i][0] for i in range(len(slabs)) if done[i]]
     solved: list = []
-    slab_seconds: list = []
-    load_seconds: list = []
-    upload_seconds: list = []
-    solve_seconds: list = []
+    slab_s: list = []
+    load_s: list = []
+    upload_s: list = []
+    solve_s: list = []
     n_nodes = max(1, rec.mesh.size)
     every = checkpoint_every
     since_save = 0
@@ -214,26 +246,31 @@ def reconstruct_streaming(
     )
     for pos, (i, slab_in) in enumerate(pre):
         j0, j1 = slabs[i]
-        t0 = time.perf_counter()
-        if up_overlap:
-            staged = slab_in  # StagedSlab, upload already done
-            t_up = pre.times[pos]["stage"]
-        else:
-            staged = rec.stage_sino(slab_in)
-            t_up = time.perf_counter() - t0
-        assert isinstance(staged, StagedSlab)
-        t1 = time.perf_counter()
-        x, r = rec.reconstruct(staged, iters=iters)
-        t_solve = time.perf_counter() - t1
-        volume.write(j0, x)
-        dt = time.perf_counter() - t0
+        # spans both time the pipeline rungs (their duration_s IS what
+        # lands in StreamResult) and, when tracing is on, record the
+        # Perfetto lanes the CI obs-smoke asserts on
+        with span("stream/slab", slab=i, j0=j0) as sp_slab:
+            if up_overlap:
+                staged = slab_in  # StagedSlab, upload already done
+                t_up = pre.times[pos]["stage"]
+            else:
+                with span("stream/upload", slab=i) as sp_up:
+                    staged = rec.stage_sino(slab_in)
+                t_up = sp_up.duration_s
+            assert isinstance(staged, StagedSlab)
+            with span("stream/solve", slab=i, iters=iters) as sp_solve:
+                x, r = rec.reconstruct(staged, iters=iters)
+            with span("stream/write", slab=i):
+                volume.write(j0, x)
+        dt = sp_slab.duration_s
         res[:, j0:j1] = r
         done[i] = 1
         solved.append(j0)
-        slab_seconds.append(dt)
-        load_seconds.append(pre.times[pos]["load"])
-        upload_seconds.append(t_up)
-        solve_seconds.append(t_solve)
+        slab_s.append(dt)
+        load_s.append(pre.times[pos]["load"])
+        upload_s.append(t_up)
+        solve_s.append(sp_solve.duration_s)
+        obs_metrics.inc("stream_slabs_total")
         since_save += 1
         if every is None and ckpt_dir is not None:
             # first slab: measure one save, then derive the Young/Daly
@@ -255,10 +292,10 @@ def reconstruct_streaming(
         y_slab=int(y_slab),
         solved=solved,
         skipped=skipped,
-        slab_seconds=slab_seconds,
-        load_seconds=load_seconds,
-        upload_seconds=upload_seconds,
-        solve_seconds=solve_seconds,
+        slab_s=slab_s,
+        load_s=load_s,
+        upload_s=upload_s,
+        solve_s=solve_s,
         # with disk prefetch on, loads of slab i+1 hide under slab i's
         # solve; with device_upload="overlap" the upload does too
         upload_overlapped=bool(overlap and up_overlap),

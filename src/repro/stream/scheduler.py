@@ -47,9 +47,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Iterable, Sequence
+
+from ..obs.trace import span
 
 __all__ = ["SlabPlan", "suggest_slab", "Prefetcher", "PrefetchError"]
 
@@ -65,6 +66,7 @@ class PrefetchError(RuntimeError):
     def __init__(self, item, index: int, cause: BaseException):
         self.item = item
         self.index = index
+        self.cause = cause
         super().__init__(
             f"prefetch of item {item!r} (index {index}) failed: "
             f"{type(cause).__name__}: {cause}"
@@ -236,13 +238,17 @@ class Prefetcher:
         return len(self._items)
 
     def _produce(self, pos, item):
-        t0 = time.perf_counter()
-        out = self._fetch(item)
-        t1 = time.perf_counter()
+        # spans always measure (their durations feed self.times and,
+        # through the driver, StreamResult); with tracing on they land
+        # on the worker thread's own Perfetto lane
+        with span("stream/load", pos=pos) as sp_load:
+            out = self._fetch(item)
+        t_stage = 0.0
         if self._stage is not None:
-            out = self._stage(out)
-        t2 = time.perf_counter()
-        self.times[pos] = {"load": t1 - t0, "stage": t2 - t1}
+            with span("stream/stage", pos=pos) as sp_stage:
+                out = self._stage(out)
+            t_stage = sp_stage.duration_s
+        self.times[pos] = {"load": sp_load.duration_s, "stage": t_stage}
         return out
 
     def __iter__(self):

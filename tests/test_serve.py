@@ -110,8 +110,8 @@ def test_warm_job_skips_cold_path_and_is_faster(
     assert not warm.telemetry.plan_cold
     # and the warm job reaches its first slab strictly sooner
     assert (
-        warm.telemetry.first_slab_seconds
-        < cold.telemetry.first_slab_seconds
+        warm.telemetry.first_slab_s
+        < cold.telemetry.first_slab_s
     )
 
 
@@ -146,7 +146,7 @@ def test_concurrent_jobs_bit_exact_vs_streaming(
     for job in jobs:
         t = job.telemetry
         assert t.n_slabs == Y // Y_SLAB
-        assert t.solve_seconds > 0 and t.total_seconds > 0
+        assert t.solve_s > 0 and t.total_s > 0
 
 
 def test_jobs_visible_and_volumes_on_disk(geo, pcfg, rcfg, sinos,

@@ -310,12 +310,12 @@ def test_streaming_timing_split(rec, sino_store, tmp_path):
         )
         n = len(res.solved)
         assert n == 2
-        assert len(res.load_seconds) == n
-        assert len(res.upload_seconds) == n
-        assert len(res.solve_seconds) == n
-        assert all(t > 0 for t in res.solve_seconds)
-        assert all(t >= 0 for t in res.load_seconds)
-        assert all(t >= 0 for t in res.upload_seconds)
+        assert len(res.load_s) == n
+        assert len(res.upload_s) == n
+        assert len(res.solve_s) == n
+        assert all(t > 0 for t in res.solve_s)
+        assert all(t >= 0 for t in res.load_s)
+        assert all(t >= 0 for t in res.upload_s)
         # solve dominates this CPU workload: the hidden upload fits
         # under it, which is what "upload hidden under solve" means
         if upload == "overlap":

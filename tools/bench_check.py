@@ -146,6 +146,40 @@ def compare(
     return failures, notes
 
 
+def _span_totals(path: pathlib.Path) -> dict:
+    """``{span name: total seconds}`` from a TRACE_<suite>.json file
+    (Chrome trace-event JSON as written by ``repro.obs.export``)."""
+    doc = json.loads(path.read_text())
+    out: dict = {}
+    for e in doc.get("traceEvents", []):
+        if e.get("ph") == "X":
+            out[e["name"]] = out.get(e["name"], 0.0) + e["dur"] / 1e6
+    return out
+
+
+def span_diff(base_trace: pathlib.Path, fresh_trace: pathlib.Path) -> list:
+    """Per-span-name total-duration comparison lines, largest relative
+    change first -- printed next to a gated regression so the failure
+    comes with its phase breakdown (which rung actually slowed down)
+    instead of a bare number."""
+    b, f = _span_totals(base_trace), _span_totals(fresh_trace)
+    lines = []
+    for name in sorted(set(b) | set(f)):
+        bv, fv = b.get(name), f.get(name)
+        if bv is None:
+            lines.append((float("inf"), f"{name}: (new) {fv:.4f}s"))
+        elif fv is None:
+            lines.append((float("inf"), f"{name}: {bv:.4f}s -> (gone)"))
+        elif bv > 0:
+            rel = (fv - bv) / bv
+            lines.append(
+                (abs(rel),
+                 f"{name}: {bv:.4f}s -> {fv:.4f}s ({rel:+.1%})")
+            )
+    lines.sort(key=lambda p: -p[0])
+    return [ln for _, ln in lines]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -178,6 +212,15 @@ def main(argv=None) -> int:
             print(f"  note [{fresh_file.name}] {n}")
         for f in failures:
             print(f"  FAIL [{fresh_file.name}] {f}")
+        if failures:
+            # a paired span trace (benchmarks.run --trace) turns the
+            # bare regression into a phase breakdown
+            trace_name = fresh_file.name.replace("BENCH_", "TRACE_")
+            bt, ft = base_dir / trace_name, fresh_dir / trace_name
+            if bt.exists() and ft.exists():
+                print(f"  span breakdown [{trace_name}]:")
+                for line in span_diff(bt, ft):
+                    print(f"    {line}")
         all_failures += failures
         checked += 1
         print(

@@ -37,6 +37,9 @@ DOCTEST_MODULES = [
     "repro.tune.passport",
     "repro.serve.admission",
     "repro.serve.batching",
+    "repro.obs.trace",
+    "repro.obs.metrics",
+    "repro.obs.drift",
 ]
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -80,8 +80,8 @@ def main() -> int:
     print(
         "serve-smoke OK: 3 jobs, 2 batches, "
         f"{st['builds']} cold builds, {len(events)} previews "
-        f"(pair first-slab: {a1.telemetry.first_slab_seconds:.2f}s / "
-        f"{a2.telemetry.first_slab_seconds:.2f}s)"
+        f"(pair first-slab: {a1.telemetry.first_slab_s:.2f}s / "
+        f"{a2.telemetry.first_slab_s:.2f}s)"
     )
     return 0
 
