@@ -30,6 +30,8 @@ from ..dist.collectives import sparse_exchange
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from ..obs.trace import span as obs_span
+from ..resil import inject
+from ..resil.errors import NonFiniteSolveError
 from ..kernels.ops import (
     apply_operator,
     sort_segments_by_class,
@@ -611,6 +613,11 @@ class Reconstructor:
         iterates stay in range; the solution scales back exactly.
         ``sino_nat`` may be a pre-staged :class:`StagedSlab` (see
         :meth:`stage_sino`); the math is identical either way.
+
+        Raises :class:`~repro.resil.errors.NonFiniteSolveError` when
+        the solution contains NaN/Inf (a blown-up narrow-precision
+        solve) -- the streaming driver's retry/escalate/quarantine
+        hook.
         """
         staged = (
             sino_nat
@@ -629,7 +636,22 @@ class Reconstructor:
             x, res = self._get_fn("cg", iters)(self._arrays, staged.y, x0)
             sp.fence(x)  # async dispatch must not end the span early
         self._emit_exchange(iters, staged.n_slices)
-        return self.unpack_tomo(x) / scale, np.asarray(res) / scale
+        x_nat = self.unpack_tomo(x) / scale
+        # the resilience guard: a narrow-precision solve that blew up
+        # (or an injected nonfinite fault) surfaces as a typed error the
+        # streaming driver can retry / escalate one precision rung /
+        # quarantine, instead of NaNs landing silently in the volume
+        x_nat = inject.mutate(
+            "recon/solve", x_nat, ctx={"precision": self.cfg.precision}
+        )
+        if not np.isfinite(x_nat).all():
+            n_bad = int(x_nat.size - np.isfinite(x_nat).sum())
+            raise NonFiniteSolveError(
+                f"solve produced {n_bad} non-finite value(s) over "
+                f"{staged.n_slices} slices "
+                f"(precision={self.cfg.precision})"
+            )
+        return x_nat, np.asarray(res) / scale
 
     def _emit_exchange(self, iters: int, n_slices: int):
         """Annotate a finished solve with its modeled wire traffic.

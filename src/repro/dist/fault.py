@@ -86,8 +86,15 @@ def rebalance(ranges: dict, stragglers, shed: float = 0.5) -> dict:
 
     Returns:
       New worker -> (start, end) map over the same total span, re-laid-out
-      contiguously in worker key order.  Total slice count is conserved.
+      contiguously in worker key order.  Total slice count is conserved,
+      and a straggler that had work keeps at least one slice -- even at
+      ``shed=1.0`` it sheds load, never its membership (zeroing it out
+      would drop it from the mesh, which is ``remesh``'s job, not a
+      rebalance).  Empty input maps and empty per-worker ranges are
+      both fine (an empty range stays empty, contiguity holds).
     """
+    if not ranges:
+        return {}
     keys = sorted(ranges)
     sizes = {k: ranges[k][1] - ranges[k][0] for k in keys}
     bad = [k for k in keys if k in set(stragglers)]
@@ -96,7 +103,7 @@ def rebalance(ranges: dict, stragglers, shed: float = 0.5) -> dict:
         return dict(ranges)
     moved = 0
     for k in bad:
-        give = int(sizes[k] * shed)
+        give = min(int(sizes[k] * shed), max(sizes[k] - 1, 0))
         sizes[k] -= give
         moved += give
     for i in range(moved):  # round-robin keeps healthy loads even

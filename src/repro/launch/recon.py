@@ -68,6 +68,16 @@ def main(argv=None):
              "command line left at its default",
     )
     ap.add_argument(
+        "--max-retries", type=int, default=2,
+        help="--stream: transient-failure retries per slab before "
+             "quarantine (resil.RetryPolicy; total tries = retries + 1)",
+    )
+    ap.add_argument(
+        "--fail-fast", action="store_true",
+        help="--stream: re-raise the first slab failure instead of "
+             "retrying / quarantining (debugging)",
+    )
+    ap.add_argument(
         "--trace", default=None, metavar="OUT.json",
         help="record repro.obs spans and write a Chrome trace-event "
              "JSON (load it at ui.perfetto.dev); with --stream also "
@@ -177,6 +187,7 @@ def _finish_trace(args, rec):
 
 def _run_streaming(args, geo, a, rec):
     """Simulate -> store -> budgeted slab drain -> slab-wise QA."""
+    from ..resil import RetryPolicy
     from ..stream import SlabStore, reconstruct_streaming, simulate_to_store
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="xct_stream_")
@@ -198,11 +209,17 @@ def _run_streaming(args, geo, a, rec):
         iters=args.iters, mem_budget=budget,
         ckpt_dir=os.path.join(workdir, "ckpt"),
         device_upload=args.device_upload,
+        retry=RetryPolicy(max_attempts=max(args.max_retries, 0) + 1),
+        fail_fast=args.fail_fast,
     )
     dt = time.time() - t0
-    # slab-wise QA: the full volume never lives in host memory
+    # slab-wise QA: the full volume never lives in host memory.
+    # Quarantined slabs have no shard on disk -- skip them.
+    failed = set(result.failed_slabs)
     errs = []
     for j0, j1 in result.volume.slabs():
+        if j0 in failed:
+            continue
         x_true = phantom_slices(
             args.n, args.slices, seed=args.seed, start=j0, stop=j1
         )
@@ -211,7 +228,9 @@ def _run_streaming(args, geo, a, rec):
             np.linalg.norm(x - x_true, axis=0)
             / np.linalg.norm(x_true, axis=0)
         )
-    rel = np.concatenate(errs)
+    rel = (
+        np.concatenate(errs) if errs else np.asarray([np.nan])
+    )
     split = ""
     if result.solved:
         split = (
@@ -229,7 +248,16 @@ def _run_streaming(args, geo, a, rec):
         f"{args.slices / dt:.1f} slices/s | rel err mean "
         f"{rel.mean():.4f}" + split
     )
+    if result.retries:
+        print(f"absorbed {result.retries} transient retr"
+              f"{'y' if result.retries == 1 else 'ies'}")
     _finish_trace(args, rec)
+    if result.failed_slabs:
+        print(
+            f"PARTIAL: quarantined slab(s) at j0={result.failed_slabs} "
+            f"-- resume with the same --workdir to re-attempt"
+        )
+        raise SystemExit(3)
     return result, rel
 
 

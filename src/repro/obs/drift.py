@@ -162,7 +162,10 @@ def measured_phases(spans) -> dict:
 
     A span whose recorded ``parent`` maps to the same phase is skipped:
     nested same-phase spans (``recon/solve`` inside ``stream/solve``)
-    count once, at the outermost level.
+    count once, at the outermost level.  Spans carrying a truthy
+    ``retry`` attr are skipped too: the models price one attempt per
+    slab, so retried attempts (the resilience layer's ``retry=<n>``
+    metadata, n >= 1) would inflate the measured side of the join.
     """
     events = spans.spans() if isinstance(spans, Tracer) else [
         e for e in spans if e.get("kind", "span") == "span"
@@ -174,6 +177,8 @@ def measured_phases(spans) -> dict:
             continue
         if SPAN_PHASE.get(e.get("parent")) == phase:
             continue  # same-phase child: already counted by its parent
+        if e.get("attrs", {}).get("retry"):
+            continue  # a retried attempt: the model prices one try
         out[phase] = out.get(phase, 0.0) + (e["t1"] - e["t0"])
     return out
 

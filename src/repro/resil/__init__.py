@@ -1,0 +1,51 @@
+"""Resilience layer: deterministic chaos + the recovery it validates.
+
+The paper's regime -- day-long campaigns on up to 24,576 GPUs -- means
+partial failure is the steady state, not the exception.  This package
+holds both halves of surviving it:
+
+* :mod:`~repro.resil.inject` -- a seeded :class:`FaultPlan` fired at
+  named sites (disk reads, prefetch loads, solves, plan builds), pure
+  in ``(seed, site, key, attempt)`` and zero-overhead when inactive;
+* :mod:`~repro.resil.retry` -- :class:`RetryPolicy` with deterministic
+  backoff jitter, driving the streaming driver's and serve path's
+  transient-failure recovery;
+* :mod:`~repro.resil.circuit` -- a per-``plan_key``
+  :class:`CircuitBreaker` for the serve build path;
+* :mod:`~repro.resil.errors` -- the typed failures the above dispatch
+  on (:class:`CorruptShardError`, :class:`NonFiniteSolveError`, ...).
+
+Depends only on :mod:`repro.obs` (metrics + trace instants), so every
+other subsystem can import it without cycles.  See
+``docs/fault_tolerance.md`` for the failure model and state machines.
+"""
+from . import inject
+from .circuit import CircuitBreaker
+from .errors import (
+    CorruptShardError,
+    DeadlineExceeded,
+    InjectedError,
+    InjectedIOError,
+    InjectedPreemption,
+    InjectedThreadDeath,
+    NonFiniteSolveError,
+)
+from .inject import Fault, FaultPlan
+from .retry import RETRYABLE_IO, RetryPolicy, call_with_retry
+
+__all__ = [
+    "inject",
+    "Fault",
+    "FaultPlan",
+    "RetryPolicy",
+    "RETRYABLE_IO",
+    "call_with_retry",
+    "CircuitBreaker",
+    "CorruptShardError",
+    "NonFiniteSolveError",
+    "DeadlineExceeded",
+    "InjectedIOError",
+    "InjectedThreadDeath",
+    "InjectedError",
+    "InjectedPreemption",
+]

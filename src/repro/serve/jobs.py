@@ -13,8 +13,15 @@ slabs land instead of waiting for the volume).
 Lifecycle (monotone; terminal states starred)::
 
     QUEUED -> RUNNING -> DONE*
-       \\-> REJECTED*        (admission: impossible budget / full queue)
-        \\-> FAILED*          (runtime error; other jobs keep draining)
+       \\-> REJECTED*         (admission: impossible budget / full queue)
+        \\-> REJECTED_CIRCUIT* (plan build circuit open, see resil)
+         \\-> FAILED*          (runtime error; other jobs keep draining)
+
+Jobs carry their own resilience knobs: ``JobSpec.retry`` (a
+``resil.RetryPolicy`` for transient slab-load failures; ``None`` uses
+the server default) and ``JobSpec.deadline_s`` (wall-clock budget from
+submit -- a job past it fails with ``error_type="DeadlineExceeded"``
+instead of starving its batch mates).
 
 Telemetry per job aggregates the same load/upload/solve split the
 streaming driver records per slab (``stream.StreamResult``), plus the
@@ -26,13 +33,15 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-import warnings
 
 import numpy as np
 
 __all__ = ["JobSpec", "Job", "JobTelemetry", "SlabPreview", "STATUSES"]
 
-STATUSES = ("queued", "running", "done", "rejected", "failed")
+STATUSES = (
+    "queued", "running", "done", "rejected", "rejected_circuit", "failed",
+)
+_TERMINAL = ("done", "rejected", "rejected_circuit", "failed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +62,8 @@ class JobSpec:
     tenant: str = "default"
     priority: int = 0  # higher runs earlier
     y_slab: int | None = None  # None -> sized by admission
+    retry: object = None  # resil.RetryPolicy | None (server default)
+    deadline_s: float | None = None  # wall budget from submit
 
     @property
     def n_slices(self) -> int:
@@ -79,8 +90,7 @@ class JobTelemetry:
     a warm job's number is strictly below the cold job's).  The
     load/upload/solve sums mirror the ``stream.StreamResult`` per-slab
     fields.  Timing fields follow the repo-wide ``*_s`` convention
-    (seconds, float); the old ``*_seconds`` names remain as deprecated
-    read aliases for one release.
+    (seconds, float).
 
     A FAILED job still carries telemetry up to the failure point:
     whatever slabs completed keep their split, ``total_s`` covers
@@ -98,31 +108,7 @@ class JobTelemetry:
     n_slabs: int = 0
     plan_cold: bool = False  # this job paid the plan build
     error_type: str | None = None  # exception class name (failed jobs)
-
-
-def _alias(cls, old: str, new: str):
-    """Deprecated ``*_seconds`` read alias for a renamed ``*_s`` field."""
-    def get(self):
-        warnings.warn(
-            f"{cls.__name__}.{old} is deprecated; use .{new}",
-            DeprecationWarning, stacklevel=2,
-        )
-        return getattr(self, new)
-
-    get.__name__ = old
-    get.__doc__ = f"Deprecated alias for :attr:`{new}`."
-    setattr(cls, old, property(get))
-
-
-for _old, _new in (
-    ("queue_seconds", "queue_s"),
-    ("first_slab_seconds", "first_slab_s"),
-    ("total_seconds", "total_s"),
-    ("load_seconds", "load_s"),
-    ("upload_seconds", "upload_s"),
-    ("solve_seconds", "solve_s"),
-):
-    _alias(JobTelemetry, _old, _new)
+    retries: int = 0  # transient slab-load retries this job absorbed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,7 +161,7 @@ class Job:
     # ------------------------------------------------------------------ #
     @property
     def terminal(self) -> bool:
-        return self.status in ("done", "rejected", "failed")
+        return self.status in _TERMINAL
 
     def wait(self, timeout: float | None = None) -> bool:
         """Block until the job reaches a terminal state."""
@@ -189,7 +175,7 @@ class Job:
             self.status = status
             if error is not None:
                 self.error = error
-        if status in ("done", "rejected", "failed"):
+        if status in _TERMINAL:
             self._done.set()
 
     def publish_preview(self, j0: int, j1: int, path: str):

@@ -16,6 +16,12 @@ the rest of the repo already trusts:
 * Results land in per-job ``stream.SlabStore`` volumes (atomic shard
   publishes -- a preview path is always a complete, memmap-able slab),
   with per-request queue/load/upload/solve telemetry.
+* The path **self-heals** (``repro.resil``): transient slab-load
+  failures retry under the job's (or server's) ``RetryPolicy``, jobs
+  carry optional wall-clock deadlines, and repeated plan-build failures
+  trip a per-``plan_key`` circuit breaker that turns the key's jobs
+  away (terminal ``rejected_circuit``) for a cooldown instead of
+  re-paying the broken build.
 
 Per-slab solves go through the same ``Reconstructor.reconstruct`` the
 streaming driver uses, on independent slices, so a job's volume is
@@ -48,6 +54,10 @@ from ..core.recon import ReconConfig, Reconstructor
 from ..dist import Topology
 from ..obs import metrics as obs_metrics
 from ..obs.trace import span as obs_span
+from ..resil import inject
+from ..resil.circuit import CircuitBreaker
+from ..resil.errors import DeadlineExceeded
+from ..resil.retry import RetryPolicy, call_with_retry
 from ..stream.scheduler import Prefetcher, PrefetchError
 from ..stream.store import SlabStore
 from .admission import AdmissionController
@@ -77,6 +87,13 @@ class ReconServer:
         synchronous loop for debugging).
       on_preview: ``callable(job, SlabPreview)`` fired per published
         slab, while the job is still running.
+      retry: default ``resil.RetryPolicy`` for transient slab-load
+        failures (a ``JobSpec.retry`` overrides it per job; ``None``
+        disables server-side load retries).
+      breaker: per-``plan_key`` ``resil.CircuitBreaker`` guarding the
+        plan build: after its ``threshold`` consecutive build failures
+        the key's jobs come back terminal ``rejected_circuit`` until
+        the cooldown lapses (default: 3 failures, 30 s cooldown).
     """
 
     def __init__(
@@ -90,6 +107,8 @@ class ReconServer:
         max_queue: int | None = None,
         overlap: bool = True,
         on_preview=None,
+        retry: RetryPolicy | None = RetryPolicy(),
+        breaker: CircuitBreaker | None = None,
     ):
         self.workdir = workdir or tempfile.mkdtemp(prefix="repro_serve_")
         os.makedirs(self.workdir, exist_ok=True)
@@ -104,6 +123,10 @@ class ReconServer:
         self.cache = PlanCache(capacity_bytes=cache_bytes)
         self.max_batch = int(max_batch)
         self.overlap = bool(overlap)
+        self.retry = retry
+        self.breaker = breaker if breaker is not None else CircuitBreaker(
+            threshold=3, cooldown_s=30.0
+        )
         self._on_preview = on_preview
         self._lock = threading.Lock()
         self._queue: list[Job] = []
@@ -113,6 +136,7 @@ class ReconServer:
         self.batches: list[dict] = []  # {"key", "jobs", "cold"}
         self._next_id = 0
         self._rejected = 0
+        self._rejected_circuit = 0
         self._completed = 0
         self._failed = 0
         self._thread: threading.Thread | None = None
@@ -222,12 +246,28 @@ class ReconServer:
 
     def _run_batch(self, batch: list[Job]):
         key = batch[0].plan_key
+        if not self.breaker.allow(key):
+            # the key's build path is poisoned and cooling down: turn
+            # the batch away instantly instead of re-paying the failure
+            for job in batch:
+                self._reject_circuit(job, key)
+            return
         for job in batch:  # queue wait ends when the batch is picked
             job._transition("running")
             job.telemetry.queue_s = time.perf_counter() - job.submit_t
-        entry, hit = self.cache.get_or_build(
-            key, lambda: self._build(batch[0])
-        )
+        try:
+            entry, hit = self.cache.get_or_build(
+                key, lambda: self._build(batch[0])
+            )
+        except Exception as e:  # noqa: BLE001 - build failure
+            self.breaker.record_failure(key)
+            for job in batch:
+                self._fail(
+                    job, f"plan build failed: {type(e).__name__}: {e}",
+                    exc=e,
+                )
+            return
+        self.breaker.record_success(key)
         self.batches.append(
             {"key": key, "jobs": [j.id for j in batch], "cold": not hit}
         )
@@ -239,10 +279,21 @@ class ReconServer:
         finally:
             self.cache.unpin(key)
 
+    def _reject_circuit(self, job: Job, key: str):
+        job.telemetry.total_s = time.perf_counter() - job.submit_t
+        job._transition(
+            "rejected_circuit",
+            error=f"plan {key[:16]} build circuit open "
+                  f"(cooling down after repeated build failures)",
+        )
+        self._rejected_circuit += 1
+        obs_metrics.inc("serve_jobs_total", status="rejected_circuit")
+
     def _build(self, job: Job):
         """The cold path: partition + winseg tables + solver (compiles
         lazily on first solve, memoized in ``Reconstructor._fns``)."""
         spec = job.spec
+        inject.fire("serve/build")  # chaos hook: plan-build failure
         plan = build_plan(spec.geo, spec.pcfg)
         rec = Reconstructor(plan, cfg=spec.rcfg)
         vb = rec.policy.vals_bytes  # packed value width (1 on q8/fp8)
@@ -285,7 +336,26 @@ class ReconServer:
 
         def fetch(task):
             job, (j0, j1) = task
-            return job.spec.read_slab(j0, j1)
+            policy = job.spec.retry if job.spec.retry is not None \
+                else self.retry
+            if policy is None:
+                return job.spec.read_slab(j0, j1)
+
+            def load(attempt):
+                with obs_span(
+                    "serve/load", job=job.id, j0=j0, retry=attempt
+                ):
+                    return job.spec.read_slab(j0, j1)
+
+            def note():
+                job.telemetry.retries += 1
+
+            # per-job policy: a flaky tenant store retries with its own
+            # backoff before the failure can surface as a PrefetchError
+            return call_with_retry(
+                load, policy=policy, site="serve/load", key=j0,
+                on_retry=note,
+            )
 
         while tasks:
             pre = Prefetcher(
@@ -296,6 +366,22 @@ class ReconServer:
             try:
                 for pos, (task, staged) in enumerate(pre):
                     job, (j0, j1) = task
+                    if job.status != "running":
+                        # failed earlier in this drain (deadline / bad
+                        # load); its later slabs are already in flight
+                        consumed = pos + 1
+                        continue
+                    dl = job.spec.deadline_s
+                    if dl is not None and (
+                        time.perf_counter() - job.submit_t > dl
+                    ):
+                        self._fail(
+                            job,
+                            f"deadline {dl:g}s exceeded",
+                            exc=DeadlineExceeded(f"{dl:g}s"),
+                        )
+                        consumed = pos + 1
+                        continue
                     lane = f"tenant:{job.spec.tenant}"
                     # a solve/write failure propagates through these
                     # spans, so the failing slab's span records the
@@ -410,6 +496,7 @@ class ReconServer:
         s.update(
             submitted=self._next_id,
             rejected=self._rejected,
+            rejected_circuit=self._rejected_circuit,
             completed=self._completed,
             failed=self._failed,
             queued=len(self._queue),

@@ -51,6 +51,8 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Iterable, Sequence
 
 from ..obs.trace import span
+from ..resil import inject
+from ..resil.retry import RetryPolicy, call_with_retry
 
 __all__ = ["SlabPlan", "suggest_slab", "Prefetcher", "PrefetchError"]
 
@@ -217,6 +219,14 @@ class Prefetcher:
     produced.  A failure in the worker thread re-raises at the
     consuming ``next()`` as :class:`PrefetchError` carrying the failing
     item and position.
+
+    With ``retry=RetryPolicy(...)`` transient fetch/stage failures
+    (``resil.RETRYABLE_IO``: disk errors, corrupt shards, timeouts)
+    retry *in the worker* with deterministic backoff before anything
+    surfaces -- a recovered hiccup costs one backoff, not a drain-loop
+    round trip.  ``self.retries`` counts them; only exhausted (or
+    non-retryable, e.g. a dying worker thread) failures become
+    :class:`PrefetchError`.
     """
 
     def __init__(
@@ -227,28 +237,60 @@ class Prefetcher:
         depth: int = 1,
         enabled: bool = True,
         stage: Callable | None = None,
+        retry: RetryPolicy | None = None,
     ):
         self._fetch = fetch
         self._stage = stage
         self._items = list(items)
         self._depth = depth if enabled else 0
+        self._retry = retry
         self.times: dict = {}
+        self.retries = 0
 
     def __len__(self) -> int:
         return len(self._items)
 
+    def _note_retry(self):
+        self.retries += 1
+
     def _produce(self, pos, item):
         # spans always measure (their durations feed self.times and,
         # through the driver, StreamResult); with tracing on they land
-        # on the worker thread's own Perfetto lane
-        with span("stream/load", pos=pos) as sp_load:
-            out = self._fetch(item)
-        t_stage = 0.0
+        # on the worker thread's own Perfetto lane.  Retried attempts
+        # carry retry=<n> so obs.drift excludes them from the model
+        # join; the last (successful) attempt's time is what lands in
+        # self.times.
+        key = item if isinstance(item, int) else pos
+
+        def load(attempt):
+            with span("stream/load", pos=pos, retry=attempt) as sp:
+                inject.fire("stream/load", key=key)
+                out = self._fetch(item)
+            self.times[pos] = {"load": sp.duration_s, "stage": 0.0}
+            return out
+
+        if self._retry is None:
+            out = load(0)
+        else:
+            out = call_with_retry(
+                load, policy=self._retry, site="stream/load", key=key,
+                on_retry=self._note_retry,
+            )
         if self._stage is not None:
-            with span("stream/stage", pos=pos) as sp_stage:
-                out = self._stage(out)
-            t_stage = sp_stage.duration_s
-        self.times[pos] = {"load": sp_load.duration_s, "stage": t_stage}
+            def stage_one(attempt):
+                with span("stream/stage", pos=pos, retry=attempt) as sp:
+                    inject.fire("stream/stage", key=key)
+                    staged = self._stage(out)
+                self.times[pos]["stage"] = sp.duration_s
+                return staged
+
+            if self._retry is None:
+                out = stage_one(0)
+            else:
+                out = call_with_retry(
+                    stage_one, policy=self._retry, site="stream/stage",
+                    key=key, on_retry=self._note_retry,
+                )
         return out
 
     def __iter__(self):

@@ -11,14 +11,22 @@ Sec. III-E: slices are independent least-squares problems sharing ``A``):
   <dir>/slab_000016_000032.npy  slices [16, 32)
   ...
 
-Writes are slab-granular and *atomic* (tmp + ``os.replace``, the same
-publish discipline as ``ckpt.checkpoint``): a crash mid-write never leaves
-a torn shard, and the set of shard files on disk doubles as a completion
-record (``written_slabs``).  Reads are range-granular -- ``read(j0, j1)``
-assembles any slice range from the covering shards via memmap, so a
-scheduler is free to drain the store in slabs larger than the writer's
-(e.g. the simulator writes fine-grained slabs, the solver reads
-budget-sized ones).
+Writes are slab-granular, *atomic* and *durable* (tmp + fsync +
+``os.replace`` + directory fsync, the same publish discipline as
+``ckpt.checkpoint``): a crash mid-write never leaves a torn shard and a
+crash right after the rename cannot publish one either -- the data hits
+the platter before the name does.  Each write also records the shard's
+crc32 in the manifest (under ``"checksums"``, keyed ``"<j0>_<j1>"``);
+``read`` verifies a shard the first time it touches it and raises a
+typed :class:`~repro.resil.errors.CorruptShardError` on mismatch, which
+the retry layer treats as retryable-once-then-quarantine.  Verification
+is cached per ``(path, mtime)`` so steady-state reads stay memmap-fast;
+the cache is bypassed while a fault plan is active (injected corruption
+must never be masked by it).  Reads are range-granular -- ``read(j0,
+j1)`` assembles any slice range from the covering shards via memmap, so
+a scheduler is free to drain the store in slabs larger than the
+writer's (e.g. the simulator writes fine-grained slabs, the solver
+reads budget-sized ones).
 
 ``simulate_to_store`` is the streaming test-fixture writer: it generates
 phantom slices and forward-projects them slab-by-slab
@@ -34,12 +42,54 @@ import json
 import os
 import re
 import tempfile
+import threading
+import zlib
 
 import numpy as np
+
+from ..resil import inject
+from ..resil.errors import CorruptShardError
 
 __all__ = ["SlabStore", "simulate_to_store"]
 
 _SHARD_RE = re.compile(r"^slab_(\d{6})_(\d{6})\.npy$")
+
+# the manifest's identity keys; create() re-open compares only these
+# (the "checksums" map grows with every write)
+_STATIC_KEYS = ("rows", "n_slices", "slab", "dtype")
+
+
+def _crc(arr) -> int:
+    """crc32 of an array's raw bytes (the integrity unit is the shard's
+    array data, not the .npy file, so header changes never alarm)."""
+    a = np.ascontiguousarray(arr)
+    return zlib.crc32(a.view(np.uint8).reshape(-1)) & 0xFFFFFFFF
+
+
+def _fsync_dir(directory: str) -> None:
+    """Durably record a rename in its directory (best-effort on
+    platforms that cannot fsync a directory fd)."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform-dependent
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - platform-dependent
+        pass
+    finally:
+        os.close(fd)
+
+
+def _write_json(path: str, obj: dict) -> None:
+    """Durable atomic JSON publish (fsync + replace + dir fsync)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path) or ".")
 
 
 class SlabStore:
@@ -51,6 +101,9 @@ class SlabStore:
         self.n_slices = int(manifest["n_slices"])
         self.slab = int(manifest["slab"])
         self.dtype = np.dtype(manifest["dtype"])
+        self._checksums = dict(manifest.get("checksums", {}))
+        self._verified: dict = {}  # shard path -> mtime at verification
+        self._lock = threading.Lock()  # manifest read-modify-write
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -78,16 +131,15 @@ class SlabStore:
         if os.path.exists(path):
             with open(path) as f:
                 existing = json.load(f)
-            if existing != manifest:
+            if {k: existing.get(k) for k in _STATIC_KEYS} != manifest:
                 raise ValueError(
                     f"store at {directory} already exists with a "
                     f"different manifest: {existing} vs {manifest}"
                 )
+            # keep the recorded checksums when re-opening (resume path)
+            manifest = existing
         else:
-            tmp = path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(manifest, f)
-            os.replace(tmp, path)  # atomic publish
+            _write_json(path, manifest)
         return cls(directory, manifest)
 
     @classmethod
@@ -126,11 +178,15 @@ class SlabStore:
     # I/O
     # ------------------------------------------------------------------ #
     def write(self, j0: int, arr) -> str:
-        """Atomically write the slab starting at slice ``j0``.
+        """Durably + atomically write the slab starting at slice ``j0``.
 
         ``arr`` must be exactly one write-granularity slab (``[rows,
         j1 - j0]`` with ``j0`` slab-aligned); re-writing a slab replaces
-        it atomically.
+        it atomically.  The shard's crc32 lands in the manifest *before*
+        the rename publishes the shard, and both the shard bytes and the
+        rename are fsynced -- a crash at any point leaves either the old
+        state or the new shard with a matching recorded checksum, never
+        a torn shard the resume manifest believes is done.
         """
         arr = np.asarray(arr)
         if j0 % self.slab or not 0 <= j0 < self.n_slices:
@@ -143,21 +199,74 @@ class SlabStore:
                 f"slab [{j0},{j1}) wants shape {(self.rows, j1 - j0)}, "
                 f"got {arr.shape}"
             )
+        stored = arr.astype(self.dtype, copy=False)
         final = self._shard_path(j0, j1)
         fd, tmp = tempfile.mkstemp(
             dir=self.directory, suffix=".npy.tmp"
         )
         try:
             with os.fdopen(fd, "wb") as f:
-                np.save(f, arr.astype(self.dtype, copy=False))
+                np.save(f, stored)
+                f.flush()
+                os.fsync(f.fileno())
+            self._record_checksum(j0, j1, _crc(stored))
             os.replace(tmp, final)  # atomic publish
+            _fsync_dir(self.directory)
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        self._verified[final] = os.path.getmtime(final)
         return final
 
+    def _record_checksum(self, j0: int, j1: int, crc: int) -> None:
+        path = os.path.join(self.directory, "manifest.json")
+        with self._lock:
+            with open(path) as f:
+                manifest = json.load(f)
+            manifest.setdefault("checksums", {})[f"{j0}_{j1}"] = int(crc)
+            manifest["checksum_algo"] = "crc32"
+            _write_json(path, manifest)
+            self._checksums[f"{j0}_{j1}"] = int(crc)
+
+    def _load_shard(self, s0: int, s1: int, path: str) -> np.ndarray:
+        """One shard, integrity-checked on first touch.
+
+        Verification reads the shard once and caches ``(path, mtime)``;
+        later reads memmap straight through.  While a fault plan is
+        active the cache is bypassed and the ``store/read`` injection
+        site is consulted (key = shard start slice), so injected
+        io_error / corrupt / slow faults land here -- exactly where the
+        real ones would.
+        """
+        recorded = self._checksums.get(f"{s0}_{s1}")
+        injecting = inject.active()
+        mtime = os.path.getmtime(path)
+        if not injecting and (
+            recorded is None or self._verified.get(path) == mtime
+        ):
+            # legacy shard (no recorded crc) or already verified
+            return np.load(path, mmap_mode="r")
+        shard = np.load(path, mmap_mode="r")
+        if injecting:
+            shard = inject.mutate("store/read", np.asarray(shard), key=s0)
+        if recorded is not None:
+            got = _crc(shard)
+            if got != recorded:
+                raise CorruptShardError(
+                    f"shard [{s0},{s1}) of {self.directory} is corrupt: "
+                    f"crc {got:#010x} != recorded {recorded:#010x}"
+                )
+            if not injecting:
+                self._verified[path] = mtime
+        return shard
+
     def read(self, j0: int, j1: int) -> np.ndarray:
-        """Assemble slices ``[j0, j1)`` from the covering shards."""
+        """Assemble slices ``[j0, j1)`` from the covering shards.
+
+        Raises :class:`~repro.resil.errors.CorruptShardError` when a
+        shard's bytes do not match its recorded crc (see
+        :meth:`_load_shard`).
+        """
         if not 0 <= j0 < j1 <= self.n_slices:
             raise ValueError((j0, j1, self.n_slices))
         out = np.empty((self.rows, j1 - j0), self.dtype)
@@ -170,7 +279,7 @@ class SlabStore:
                 raise FileNotFoundError(
                     f"slab [{s0},{s1}) of {self.directory} not written"
                 )
-            shard = np.load(path, mmap_mode="r")
+            shard = self._load_shard(s0, s1, path)
             hi = min(j1, s1)
             out[:, j - j0 : hi - j0] = shard[:, j - s0 : hi - s0]
             j = hi

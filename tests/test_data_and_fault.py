@@ -62,6 +62,59 @@ def test_rebalance_conserves_slices():
     assert s1[1] - s1[0] < 100  # straggler sheds load
 
 
+def test_rebalance_degenerate_cases():
+    """Pinned regressions: empty input and full shed must not zero a
+    worker out of the mesh (membership is ``remesh``'s job)."""
+    assert rebalance({}, stragglers=[0]) == {}
+    ranges = {0: (0, 10), 1: (10, 20)}
+    out = rebalance(ranges, stragglers=[1], shed=1.0)
+    assert out[1][1] - out[1][0] >= 1  # keeps at least one slice
+    assert sum(e - s for s, e in out.values()) == 20
+    # a worker that already had nothing stays empty, contiguity holds
+    ranges = {0: (0, 10), 1: (10, 10), 2: (10, 30)}
+    out = rebalance(ranges, stragglers=[2], shed=0.5)
+    assert sum(e - s for s, e in out.values()) == 30
+    assert out[0][1] == out[1][0] and out[1][1] == out[2][0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(0, 2**32 - 1),
+    st.integers(2, 8),
+    st.sampled_from([0.25, 0.5, 1.0]),
+)
+def test_rebalance_properties(seed, n_workers, shed):
+    """Property pins: total-slice conservation, monotone contiguity,
+    start preservation, and stragglers never *gaining* load -- for any
+    layout (incl. empty per-worker ranges) and any shed fraction."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, 40, size=n_workers)
+    start = int(rng.integers(0, 100))
+    ranges, s = {}, start
+    for w in range(n_workers):
+        ranges[w] = (s, s + int(sizes[w]))
+        s += int(sizes[w])
+    stragglers = [
+        w for w in range(n_workers) if rng.random() < 0.4
+    ]
+    before = {w: e - s0 for w, (s0, e) in ranges.items()}
+    out = rebalance(ranges, stragglers, shed=shed)
+    # conservation + same span start
+    assert sum(e - s0 for s0, e in out.values()) == sum(before.values())
+    assert min(s0 for s0, _ in out.values()) == start
+    # contiguity: ranges tile the span in worker key order
+    keys = sorted(out)
+    for a, b in zip(keys, keys[1:]):
+        assert out[a][1] == out[b][0]
+    healthy = [w for w in range(n_workers) if w not in stragglers]
+    if stragglers and healthy:
+        for w in stragglers:
+            after = out[w][1] - out[w][0]
+            assert after <= before[w]  # never grows
+            if before[w] >= 1:
+                assert after >= 1  # never zeroed out
+
+
 def test_checkpoint_period_scaling():
     """More nodes => shorter optimal period (Young/Daly)."""
     p1k = suggest_checkpoint_period(30, 1000)

@@ -15,8 +15,8 @@ Pins the observability contract:
     fields to <1% (they are the same span durations by construction);
   * a failed serve job still carries terminal telemetry and its
     failing span records the exception type;
-  * the deprecated ``*_seconds`` aliases warn and mirror the ``*_s``
-    fields.
+  * the deprecated ``*_seconds`` aliases are gone (the one-release
+    window closed; only the ``*_s`` names remain).
 """
 import json
 import threading
@@ -404,24 +404,15 @@ def test_failed_serve_job_reports_terminal_telemetry(
     assert "serve_queue_depth 0" in text
 
 
-# --------------------------------------------------------------------- #
-# deprecated aliases
-# --------------------------------------------------------------------- #
-def test_deprecated_seconds_aliases_warn_and_mirror():
+def test_seconds_aliases_are_gone():
+    """The deprecated ``*_seconds`` aliases completed their one-release
+    deprecation window: only the ``*_s`` names remain."""
     from repro.serve.jobs import JobTelemetry
     from repro.stream.driver import StreamResult
 
     res = StreamResult(
         volume=None, resnorms=np.zeros((1, 1)), y_slab=4,
         solved=[0], skipped=[], slab_s=[1.5],
-        load_s=[0.25], upload_s=[0.5], solve_s=[0.75],
     )
-    with pytest.warns(DeprecationWarning, match="slab_seconds"):
-        assert res.slab_seconds == [1.5]
-    with pytest.warns(DeprecationWarning, match="solve_seconds"):
-        assert res.solve_seconds == [0.75]
-    tel = JobTelemetry(queue_s=1.0, total_s=2.0)
-    with pytest.warns(DeprecationWarning, match="queue_seconds"):
-        assert tel.queue_seconds == 1.0
-    with pytest.warns(DeprecationWarning, match="total_seconds"):
-        assert tel.total_seconds == 2.0
+    assert not hasattr(res, "slab_seconds")
+    assert not hasattr(JobTelemetry(), "queue_seconds")

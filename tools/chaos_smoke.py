@@ -1,0 +1,159 @@
+"""CI smoke for the resilience layer (see .github chaos-smoke).
+
+Drives a tiny streaming reconstruction through three seeded chaos
+scenarios and asserts the whole fault-tolerance contract end to end
+(the same pins as ``tests/test_resil.py``, but as a single artifact-
+producing gate):
+
+  1. **clean** -- no plan active: the baseline volume and the clean-path
+     throughput;
+  2. **transient** -- one injected disk read error, one corrupt shard,
+     one non-finite solve, all healing on retry: the drain must finish
+     COMPLETE, bit-identical to the clean run, with
+     ``retries_total > 0`` and exactly the three planned faults fired;
+  3. **quarantine** -- a persistent read error on one shard: exactly
+     that slab lands in ``StreamResult.failed_slabs`` (and
+     ``slabs_quarantined_total``), every other slab still matches the
+     clean run, and a resume with the fault gone completes the volume.
+
+Finally the clean-path perf guard: the injection sites are compiled
+into the hot loops, so a drain under an *empty* activated plan (every
+site consulted, nothing fires) must stay within 2x of the clean drain
+-- and the inactive fast path (one attribute load + None check) must
+sustain millions of consults per second.  The committed
+``benchmarks/baseline`` stream numbers remain the authoritative
+regression gate; this is the smoke-level canary.
+
+Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python tools/chaos_smoke.py
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.core.geometry import XCTGeometry, build_system_matrix
+    from repro.core.partition import PartitionConfig, build_plan
+    from repro.core.recon import ReconConfig, Reconstructor
+    from repro.obs import metrics as obs_metrics
+    from repro.resil import FaultPlan, RetryPolicy, inject
+    from repro.stream import (
+        SlabStore, reconstruct_streaming, simulate_to_store,
+    )
+
+    work = args.workdir or tempfile.mkdtemp(prefix="xct_chaos_")
+    slices = 8
+    geo = XCTGeometry(n=32, n_angles=24)
+    a = build_system_matrix(geo)
+    plan = build_plan(
+        geo,
+        PartitionConfig(n_data=1, tile=4, rows_per_block=16,
+                        nnz_per_stage=16),
+        a=a,
+    )
+    rec = Reconstructor(
+        plan, cfg=ReconConfig(precision="single", comm_mode="rs", fuse=4)
+    )
+    sino = SlabStore.create(
+        os.path.join(work, "sino"), geo.n_rays, slices, 4
+    )
+    simulate_to_store(a, geo.n, sino, noise=0.01, seed=0)
+    retry = RetryPolicy(max_attempts=3, base_delay_s=0.0, jitter=0.0)
+
+    def drain(tag, **kw):
+        t0 = time.perf_counter()
+        res = reconstruct_streaming(
+            rec, sino, os.path.join(work, tag), iters=3, y_slab=4,
+            retry=retry, **kw,
+        )
+        return res, time.perf_counter() - t0
+
+    # 1. clean baseline ------------------------------------------------ #
+    clean, t_clean = drain("clean")
+    assert clean.complete and clean.failed_slabs == [], clean
+    base = clean.volume.to_array()
+
+    # 2. transient faults heal bit-exactly ----------------------------- #
+    m = obs_metrics.set_metrics(obs_metrics.Metrics())
+    fp = (
+        FaultPlan(seed=7)
+        .add("store/read", "io_error", key=0, attempts=(0,))
+        .add("store/read", "corrupt", key=4, attempts=(0,))
+        .add("recon/solve", "nonfinite", key=1, attempts=(0,))
+    )
+    with inject.activate(fp) as h:
+        chaos, _ = drain("chaos")
+    mm = obs_metrics.get_metrics()
+    assert chaos.complete and chaos.failed_slabs == [], chaos
+    assert chaos.retries >= 3, chaos.retries
+    assert sorted(f[3] for f in h.fired) == [
+        "corrupt", "io_error", "nonfinite",
+    ], h.fired
+    assert mm.get("retries_total", site="stream/load") >= 1
+    assert mm.get("retries_total", site="stream/solve") >= 1
+    assert mm.get(
+        "faults_injected_total", site="store/read", kind="io_error"
+    ) == 1
+    np.testing.assert_array_equal(chaos.volume.to_array(), base)
+    np.testing.assert_array_equal(chaos.resnorms, clean.resnorms)
+
+    # 3. exhausted retries quarantine exactly the poison slab ---------- #
+    obs_metrics.set_metrics(obs_metrics.Metrics())
+    fp2 = FaultPlan(seed=11).add(
+        "store/read", "io_error", key=4, attempts=None
+    )
+    ck = os.path.join(work, "ck")
+    with inject.activate(fp2):
+        part, _ = drain("poison", ckpt_dir=ck)
+    mm = obs_metrics.get_metrics()
+    assert part.failed_slabs == [4] and not part.complete, part
+    assert mm.get("slabs_quarantined_total") == 1
+    for j0, j1 in clean.volume.slabs():
+        if j0 != 4:
+            np.testing.assert_array_equal(
+                part.volume.read(j0, j1), base[:, j0:j1]
+            )
+    rest = reconstruct_streaming(  # fault gone: resume heals the hole
+        rec, sino, os.path.join(work, "poison"), iters=3, y_slab=4,
+        retry=retry, ckpt_dir=ck,
+    )
+    assert rest.complete and rest.solved == [4], rest
+    np.testing.assert_array_equal(rest.volume.to_array(), base)
+    obs_metrics.set_metrics(m)
+
+    # 4. clean-path guard: sites cost ~nothing ------------------------- #
+    n = 1_000_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        inject.fire("stream/load", key=0)
+    per_call = (time.perf_counter() - t0) / n
+    assert per_call < 2e-6, f"inactive fire() costs {per_call:.2e}s"
+    empty, t_empty = drain("empty")  # all sites consulted, none fire
+    with inject.activate(FaultPlan(seed=0)):
+        noop, t_noop = drain("noop")
+    np.testing.assert_array_equal(noop.volume.to_array(), base)
+    assert t_noop < max(2.0 * max(t_clean, t_empty), t_clean + 2.0), (
+        f"empty-plan drain {t_noop:.2f}s vs clean {t_clean:.2f}s"
+    )
+
+    print(
+        f"chaos-smoke OK: transient heal bit-exact "
+        f"({chaos.retries} retries), quarantine -> resume bit-exact, "
+        f"inactive site {per_call * 1e9:.0f} ns/call, "
+        f"clean {slices / t_clean:.1f} slices/s"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,6 +40,9 @@ DOCTEST_MODULES = [
     "repro.obs.trace",
     "repro.obs.metrics",
     "repro.obs.drift",
+    "repro.resil.inject",
+    "repro.resil.retry",
+    "repro.resil.circuit",
 ]
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
